@@ -1,0 +1,38 @@
+"""Paper Fig. 10 analogue: parallel-factor and tile-size sweep.
+
+Sweeps (max parallel factor × scan/attention chunk size) and reports the
+estimated step time and the kernel-level VMEM working set per tile (the
+TPU counterpart of the paper's BRAM/DSP-vs-tile trade: too-small tiles
+starve the MXU and waste bandwidth on block overheads; too-large tiles
+overflow VMEM)."""
+from __future__ import annotations
+
+from repro.configs import SHAPES, get_config
+from repro.core import SINGLE_POD, build_lm_graph, optimize
+
+VMEM_BYTES = 16 * 2 ** 20     # v5e ~16 MiB/core
+
+
+def _vmem_working_set(chunk: int, d_block: int, n_state: int = 16) -> int:
+    # ssd_scan tiles: x, dt (chunk × d_block), B/C (chunk × N), state.
+    return 4 * (2 * chunk * d_block + 2 * chunk * n_state
+                + d_block * n_state)
+
+
+def run(report, arch: str = "jamba-v0.1-52b",
+        factors=(4, 16, 64, 256), tiles=(32, 128, 512)) -> None:
+    cfg = get_config(arch)
+    shape = SHAPES["train_4k"]
+    for pf in factors:
+        g = build_lm_graph(cfg, shape)
+        _, _, rep = optimize(g, SINGLE_POD, training=True,
+                             max_parallel_factor=pf)
+        for tile in tiles:
+            ws = _vmem_working_set(tile, 128)
+            fits = ws <= VMEM_BYTES
+            report.add(
+                f"ablation_scale/{arch}/pf{pf}/tile{tile}",
+                us_per_call=rep.cost.total_s * 1e6,
+                derived=f"est_t_ms={rep.cost.total_s*1e3:.2f}|"
+                        f"hbm={rep.cost.hbm_bytes_per_device/2**30:.2f}GiB|"
+                        f"vmem_tile_bytes={ws}|fits_vmem={fits}")

@@ -1,0 +1,36 @@
+"""Paper Table 8 analogue: the assigned model zoo under HIDA-OPT vs the
+naive (pure-DP) plan — estimated step time, throughput gain, HBM traffic
+reduction, and HIDA compile time (the paper's productivity axis: minutes
+not hours)."""
+from __future__ import annotations
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.core import SINGLE_POD, build_lm_graph, optimize
+
+
+def run(report, archs=None) -> None:
+    shape = SHAPES["train_4k"]
+    for arch in (archs or list_archs()):
+        cfg = get_config(arch)
+
+        def build():
+            return build_lm_graph(cfg, shape)
+
+        g = build()
+        sched, plan, rep = optimize(g, SINGLE_POD, training=True)
+        g2 = build()
+        _, _, rep_naive = optimize(g2, SINGLE_POD, ia=False, ca=False,
+                                   training=True)
+        repeats = g.meta.repeat_factor
+        hida_step = rep.cost.total_s * repeats
+        naive_step = rep_naive.cost.total_s * repeats
+        tput_gain = naive_step / max(hida_step, 1e-12)
+        mem_gain = (rep_naive.cost.hbm_bytes_per_device
+                    / max(rep.cost.hbm_bytes_per_device, 1))
+        report.add(
+            f"models/{arch}", us_per_call=hida_step * 1e6,
+            derived=f"est_step_ms={hida_step*1e3:.1f}|"
+                    f"tput_vs_naive={tput_gain:.2f}x|"
+                    f"hbm_traffic_vs_naive={mem_gain:.2f}x|"
+                    f"dominant={rep.cost.dominant}|"
+                    f"opt_time_s={rep.compile_time_s:.1f}")

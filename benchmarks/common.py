@@ -1,0 +1,212 @@
+"""Shared benchmark utilities: PolyBench-style dataflow graphs (the
+paper's Table 7 kernels re-expressed as HIDA IR + jnp functions), plan
+comparison helpers, and the estimated-throughput metric.
+
+On this CPU-only container the large-scale numbers are roofline
+*estimates* cross-checked against compiled-HLO collective bytes; the
+PolyBench kernels additionally run for real wall time at reduced sizes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Graph, MeshSpec, SINGLE_POD, estimate, optimize)
+from repro.core.ir import AccessMap
+
+# PolyBench LARGE-ish dims (scaled to keep estimator numbers meaningful).
+PB_N = 1024
+
+
+def _g(name):
+    return Graph(name)
+
+
+def build_2mm(n: int = PB_N) -> Graph:
+    """D = alpha*A*B*C + beta*D — two chained matmuls (dataflow!)."""
+    g = _g("2mm")
+    for nm, dims in [("A", ("i", "k")), ("B", ("k", "j")),
+                     ("C", ("j", "l")), ("D", ("i", "l"))]:
+        g.tensor(nm, (n, n), "f32", dims, is_input=True)
+    g.tensor("tmp", (n, n), "f32", ("i", "j"))
+    g.tensor("out", (n, n), "f32", ("i", "l"))
+    g.op("matmul", ["A", "B"], ["tmp"], {"i": n, "j": n, "k": n},
+         flops=2 * n ** 3, name="mm1")
+    g.op("matmul", ["tmp", "C", "D"], ["out"], {"i": n, "l": n, "j": n},
+         flops=2 * n ** 3, name="mm2")
+    g.outputs = ["out"]
+    return g
+
+
+def build_3mm(n: int = PB_N) -> Graph:
+    g = _g("3mm")
+    for nm, dims in [("A", ("i", "k")), ("B", ("k", "j")),
+                     ("C", ("j", "m")), ("D", ("m", "l"))]:
+        g.tensor(nm, (n, n), "f32", dims, is_input=True)
+    g.tensor("E", (n, n), "f32", ("i", "j"))
+    g.tensor("F", (n, n), "f32", ("j", "l"))
+    g.tensor("G", (n, n), "f32", ("i", "l"))
+    g.op("matmul", ["A", "B"], ["E"], {"i": n, "j": n, "k": n},
+         flops=2 * n ** 3, name="mm1")
+    g.op("matmul", ["C", "D"], ["F"], {"j": n, "l": n, "m": n},
+         flops=2 * n ** 3, name="mm2")
+    g.op("matmul", ["E", "F"], ["G"], {"i": n, "l": n, "j": n},
+         flops=2 * n ** 3, name="mm3")
+    g.outputs = ["G"]
+    return g
+
+
+def build_atax(n: int = PB_N) -> Graph:
+    """y = Aᵀ(Ax) — two dependent matvecs."""
+    g = _g("atax")
+    g.tensor("A", (n, n), "f32", ("i", "j"), is_input=True)
+    g.tensor("x", (n,), "f32", ("j",), is_input=True)
+    g.tensor("t", (n,), "f32", ("i",))
+    g.tensor("y", (n,), "f32", ("j",))
+    g.op("matmul", ["A", "x"], ["t"], {"i": n, "j": n}, flops=2 * n * n,
+         name="Ax")
+    g.op("matmul", ["A", "t"], ["y"], {"j": n, "i": n}, flops=2 * n * n,
+         name="Atx",
+         access={"A": AccessMap.of(("i", 1), ("j", 1)),
+                 "t": AccessMap.of(("i", 1)),
+                 "y": AccessMap.of(("j", 1))})
+    g.outputs = ["y"]
+    return g
+
+
+def build_bicg(n: int = PB_N) -> Graph:
+    g = _g("bicg")
+    g.tensor("A", (n, n), "f32", ("i", "j"), is_input=True)
+    g.tensor("p", (n,), "f32", ("j",), is_input=True)
+    g.tensor("r", (n,), "f32", ("i",), is_input=True)
+    g.tensor("q", (n,), "f32", ("i",))
+    g.tensor("s", (n,), "f32", ("j",))
+    g.op("matmul", ["A", "p"], ["q"], {"i": n, "j": n}, flops=2 * n * n,
+         name="Ap")
+    g.op("matmul", ["A", "r"], ["s"], {"j": n, "i": n}, flops=2 * n * n,
+         name="Atr",
+         access={"A": AccessMap.of(("i", 1), ("j", 1)),
+                 "r": AccessMap.of(("i", 1)),
+                 "s": AccessMap.of(("j", 1))})
+    g.outputs = ["q", "s"]
+    return g
+
+
+def build_mvt(n: int = PB_N) -> Graph:
+    g = _g("mvt")
+    g.tensor("A", (n, n), "f32", ("i", "j"), is_input=True)
+    g.tensor("y1", (n,), "f32", ("j",), is_input=True)
+    g.tensor("y2", (n,), "f32", ("i",), is_input=True)
+    g.tensor("x1", (n,), "f32", ("i",))
+    g.tensor("x2", (n,), "f32", ("j",))
+    g.op("matmul", ["A", "y1"], ["x1"], {"i": n, "j": n}, flops=2 * n * n,
+         name="Ay1")
+    g.op("matmul", ["A", "y2"], ["x2"], {"j": n, "i": n}, flops=2 * n * n,
+         name="Aty2",
+         access={"A": AccessMap.of(("i", 1), ("j", 1)),
+                 "y2": AccessMap.of(("i", 1)),
+                 "x2": AccessMap.of(("j", 1))})
+    g.outputs = ["x1", "x2"]
+    return g
+
+
+def build_gesummv(n: int = PB_N) -> Graph:
+    """y = alpha*A*x + beta*B*x — two independent matvecs + combine
+    (single-loop class in the paper: no deep dataflow)."""
+    g = _g("gesummv")
+    g.tensor("A", (n, n), "f32", ("i", "j"), is_input=True)
+    g.tensor("B", (n, n), "f32", ("i", "j"), is_input=True)
+    g.tensor("x", (n,), "f32", ("j",), is_input=True)
+    g.tensor("t1", (n,), "f32", ("i",))
+    g.tensor("t2", (n,), "f32", ("i",))
+    g.tensor("y", (n,), "f32", ("i",))
+    g.op("matmul", ["A", "x"], ["t1"], {"i": n, "j": n}, flops=2 * n * n,
+         name="Ax")
+    g.op("matmul", ["B", "x"], ["t2"], {"i": n, "j": n}, flops=2 * n * n,
+         name="Bx")
+    g.op("elementwise", ["t1", "t2"], ["y"], {"i": n}, flops=2 * n,
+         name="axpy")
+    g.outputs = ["y"]
+    return g
+
+
+def build_correlation(n: int = PB_N) -> Graph:
+    g = _g("correlation")
+    g.tensor("data", (n, n), "f32", ("i", "j"), is_input=True)
+    g.tensor("mean", (n,), "f32", ("j",))
+    g.tensor("std", (n,), "f32", ("j",))
+    g.tensor("norm", (n, n), "f32", ("i", "j"))
+    g.tensor("corr", (n, n), "f32", ("j", "l"))
+    g.op("elementwise", ["data"], ["mean"], {"i": n, "j": n}, flops=n * n,
+         name="mean", reduce=("i",))
+    g.op("elementwise", ["data", "mean"], ["std"], {"i": n, "j": n},
+         flops=2 * n * n, name="std", reduce=("i",))
+    g.op("elementwise", ["data", "mean", "std"], ["norm"],
+         {"i": n, "j": n}, flops=2 * n * n, name="normalize")
+    g.op("matmul", ["norm", "norm"], ["corr"], {"j": n, "l": n, "i": n},
+         flops=2 * n ** 3, name="gram",
+         access={"norm": AccessMap.of(("i", 1), ("j", 1)),
+                 "corr": AccessMap.of(("j", 1), ("l", 1))})
+    g.outputs = ["corr"]
+    return g
+
+
+POLYBENCH = {
+    "2mm": build_2mm, "3mm": build_3mm, "atax": build_atax,
+    "bicg": build_bicg, "mvt": build_mvt, "gesummv": build_gesummv,
+    "correlation": build_correlation,
+}
+
+#: jnp implementations for wall-time micro-runs (reduced n)
+POLYBENCH_FNS = {
+    "2mm": lambda A, B, C, D: A @ B @ C + D,
+    "3mm": lambda A, B, C, D: (A @ B) @ (C @ D),
+    "atax": lambda A, x: A.T @ (A @ x),
+    "bicg": lambda A, p, r: (A @ p, A.T @ r),
+    "mvt": lambda A, y1, y2: (A @ y1, A.T @ y2),
+    "gesummv": lambda A, B, x: 1.5 * (A @ x) + 1.2 * (B @ x),
+}
+
+
+@dataclass
+class PlanResult:
+    name: str
+    total_s: float
+    critical_s: float
+    hbm_bytes: int
+    dominant: str
+    opt_time_s: float
+
+
+def evaluate_strategies(graph_builder, mesh: MeshSpec = SINGLE_POD,
+                        training: bool = False,
+                        strategies=(("hida", True, True),
+                                    ("ia", True, False),
+                                    ("ca", False, True),
+                                    ("naive", False, False)),
+                        max_pf: int | None = None) -> dict[str, PlanResult]:
+    out = {}
+    for name, ia, ca in strategies:
+        g = graph_builder()
+        sched, plan, rep = optimize(g, mesh, ia=ia, ca=ca,
+                                    training=training,
+                                    max_parallel_factor=max_pf)
+        out[name] = PlanResult(
+            name, rep.cost.total_s, rep.cost.critical_s,
+            rep.cost.hbm_bytes_per_device, rep.cost.dominant,
+            rep.compile_time_s)
+    return out
+
+
+def timed(fn, *args, iters: int = 5) -> float:
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters

@@ -1,0 +1,129 @@
+"""§Roofline table generator: reads the dry-run artifacts in
+``experiments/dryrun/`` and renders per-(arch × shape × mesh) roofline
+terms for EXPERIMENTS.md.
+
+Terms (per the assignment):
+  compute    = FLOPs / (chips · 197e12)       [analytic FLOPs: XLA's
+               cost analysis counts the layer-scan while body once]
+  memory     = HLO bytes / (chips · 819e9)    [scan-scaled]
+  collective = collective bytes / (chips · 50e9)  [loop-scaled, per-device
+               bytes already, so divided by link BW only]
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.estimator import HBM_BW, ICI_BW, PEAK_FLOPS
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(mesh: str | None = None, strategy: str = "hida"
+               ) -> list[dict]:
+    cells = []
+    for p in sorted(ARTIFACT_DIR.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("strategy", "hida") != strategy:
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        cells.append(r)
+    return cells
+
+
+_MEM_CACHE: dict = {}
+
+
+def _estimator_mem_bytes(arch: str, shape: str) -> float:
+    """Per-device HBM traffic per step from the HIDA model (node bytes ×
+    shard factors × layer repeats).  Used for the memory term because the
+    compiled 'bytes accessed' counts the layer-scan body once and offers
+    no per-computation split to scale it correctly."""
+    key = (arch, shape)
+    if key not in _MEM_CACHE:
+        from repro.configs import SHAPES, get_config
+        from repro.core import SINGLE_POD, build_lm_graph, optimize
+        cfg = get_config(arch)
+        sp = SHAPES[shape]
+        g = build_lm_graph(cfg, sp)
+        _, _, rep = optimize(g, SINGLE_POD,
+                             training=sp.mode == "train")
+        mult = 3.0 if sp.mode == "train" else 1.0   # fwd+bwd re-traffic
+        _MEM_CACHE[key] = (rep.cost.hbm_bytes_per_device
+                           * g.meta.repeat_factor * mult)
+    return _MEM_CACHE[key]
+
+
+def roofline_row(r: dict) -> dict | None:
+    if r["status"] != "ok":
+        return {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "status": r["status"], "reason": r.get("reason", "")}
+    chips = r["chips"]
+    loop = r.get("loop_trip", 1)
+    flops = r.get("analytic_flops", 0.0)
+    mem_bytes = _estimator_mem_bytes(r["arch"], r["shape"])
+    coll = r["collectives"].get("scaled_total_bytes",
+                                r["collectives"]["total_bytes"])
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = mem_bytes / HBM_BW           # already per-device
+    collective_s = coll / ICI_BW            # per-device payload
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dom = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    model_flops = r.get("model_flops_6nd", 0.0)
+    mem = r["memory_analysis"]
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "status": "ok",
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dom,
+        "roofline_frac": compute_s / step_s if step_s else 0.0,
+        "model_flops": model_flops, "hlo_flops": flops,
+        "useful_ratio": model_flops / flops if flops else 0.0,
+        "bytes_per_dev": mem["argument_size_in_bytes"]
+        + mem["temp_size_in_bytes"],
+        "compile_s": r.get("compile_s", 0.0),
+    }
+
+
+def markdown_table(mesh: str = "16x16", strategy: str = "hida") -> str:
+    rows = [roofline_row(r) for r in load_cells(mesh, strategy)]
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| roofline frac | 6ND/HLO | GiB/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r is None:
+            continue
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | "
+                f"{r['status']}: {r.get('reason','')[:60]} | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['roofline_frac']:.2f} | "
+            f"{r['useful_ratio']:.2f} | "
+            f"{r['bytes_per_dev']/2**30:.1f} | {r['compile_s']:.0f} |")
+    return "\n".join(lines)
+
+
+def run(report) -> None:
+    for r in load_cells():
+        row = roofline_row(r)
+        if row is None or row["status"] != "ok":
+            continue
+        report.add(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            us_per_call=max(row["compute_s"], row["memory_s"],
+                            row["collective_s"]) * 1e6,
+            derived=f"dom={row['dominant']}|frac={row['roofline_frac']:.2f}"
+                    f"|useful={row['useful_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,86 @@
+"""Benchmark runner — one suite per paper table/figure (deliverable d).
+
+Prints ``name,us_per_call,derived`` CSV.  Suites:
+
+* ``case_study``      — Table 2 (expert vs exhaustive vs HIDA)
+* ``polybench``       — Table 7 (C++ kernels as dataflow graphs)
+* ``models``          — Table 8 (the 10-arch zoo, HIDA vs naive)
+* ``ablation_iaca``   — Fig. 11 (IA+CA vs IA vs CA vs naive sweep)
+* ``ablation_scale``  — Fig. 10 (parallel factor × tile size)
+* ``roofline``        — §Roofline rows from dry-run artifacts (if present)
+* ``train_smoke``     — real measured CPU training throughput (smoke cfg)
+
+``python -m benchmarks.run [--suite NAME] [--fast]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Report:
+    rows: list = field(default_factory=list)
+
+    def add(self, name: str, us_per_call: float, derived: str = "") -> None:
+        self.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def bench_train_smoke(report) -> None:
+    import jax
+    from repro.launch.train import main as train_main
+    t0 = time.perf_counter()
+    out = train_main(["--arch", "smollm-135m", "--smoke", "--steps", "12",
+                      "--batch", "4", "--seq", "64", "--ckpt-every", "0",
+                      "--ckpt-dir", "/tmp/repro_bench_ckpt"])
+    dt = time.perf_counter() - t0
+    toks = 12 * 4 * 64
+    report.add("train_smoke/smollm-135m", us_per_call=dt / 12 * 1e6,
+               derived=f"tok_per_s={toks/dt:.0f}|"
+                       f"final_loss={out['final_loss']:.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="all",
+                    choices=("all", "case_study", "polybench", "models",
+                             "ablation_iaca", "ablation_scale", "roofline",
+                             "train_smoke"))
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slower model-zoo arms")
+    args = ap.parse_args()
+
+    report = Report()
+    print("name,us_per_call,derived")
+
+    want = (lambda s: args.suite in ("all", s))
+    if want("case_study"):
+        from .bench_case_study import run as r
+        r(report)
+    if want("polybench"):
+        from .bench_kernels_polybench import run as r
+        r(report)
+    if want("models"):
+        from .bench_models import run as r
+        archs = (["smollm-135m", "jamba-v0.1-52b", "deepseek-v2-236b"]
+                 if args.fast else None)
+        r(report, archs=archs)
+    if want("ablation_iaca"):
+        from .bench_ablation_iaca import run as r
+        r(report, factors=(16, 256) if args.fast else (4, 16, 64, 256))
+    if want("ablation_scale"):
+        from .bench_ablation_scale import run as r
+        r(report, factors=(16, 256) if args.fast else (4, 16, 64, 256))
+    if want("roofline"):
+        from .roofline import run as r
+        r(report)
+    if want("train_smoke"):
+        bench_train_smoke(report)
+    print(f"# {len(report.rows)} benchmark rows", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

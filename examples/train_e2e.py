@@ -1,0 +1,44 @@
+"""End-to-end training driver (deliverable b): trains smollm-135m-class
+models with the full substrate — HIDA plan, sharded deterministic data,
+AdamW + cosine schedule, async checkpointing with auto-resume, straggler
+monitor.  The loss demonstrably decreases on the markov-flavoured
+synthetic corpus.
+
+Reduced config (CPU, ~2 min for 200 steps):
+    PYTHONPATH=src python examples/train_e2e.py --steps 200
+
+Full config (TPU pod):
+    PYTHONPATH=src python examples/train_e2e.py --full --steps 500 \
+        --batch 256 --seq 4096
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (pod-scale); default is reduced")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    args = ap.parse_args()
+
+    argv = ["--arch", args.arch, "--steps", str(args.steps),
+            "--batch", str(args.batch), "--seq", str(args.seq),
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50"]
+    if not args.full:
+        argv.append("--smoke")
+    out = train_main(argv)
+    losses = out["losses"]
+    first = sum(losses[:10]) / max(len(losses[:10]), 1)
+    last = sum(losses[-10:]) / max(len(losses[-10:]), 1)
+    print(f"[e2e] loss {first:.3f} -> {last:.3f} "
+          f"({'DECREASED' if last < first else 'did not decrease'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""HIDA core: hierarchical dataflow IR + optimizer (the paper's
+contribution, re-targeted to TPU meshes)."""
+from .balance import balance_paths
+from .construct import construct_functional
+from .estimator import (MULTI_POD, SINGLE_POD, MeshSpec, estimate,
+                        roofline_terms)
+from .fusion import fuse_tasks
+from .graph import build_lm_graph
+from .ir import (AccessMap, Buffer, Graph, MemoryEffect, Node, Op, Schedule,
+                 Stream, TensorValue)
+from .lower import lower_to_structural
+from .multi_producer import eliminate_multi_producers
+from .optimize import OptimizeReport, optimize
+from .parallelize import parallelize
+from .plan import ShardingPlan, build_plan, replicated_plan
+
+__all__ = [
+    "AccessMap", "Buffer", "Graph", "MemoryEffect", "Node", "Op",
+    "Schedule", "Stream", "TensorValue", "MeshSpec", "SINGLE_POD",
+    "MULTI_POD", "estimate", "roofline_terms", "construct_functional",
+    "fuse_tasks", "lower_to_structural", "eliminate_multi_producers",
+    "balance_paths", "parallelize", "ShardingPlan", "build_plan",
+    "replicated_plan", "optimize", "OptimizeReport", "build_lm_graph",
+]

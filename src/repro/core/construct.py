@@ -1,0 +1,45 @@
+"""Functional dataflow construction — paper Algorithm 1.
+
+Walk regions bottom-up; every *dispatchable* region (owned by an iterative
+op — here: the module or a composite block — and containing at least two
+iterative sub-ops) is wrapped in a ``dispatch`` whose children each become a
+``task``.  The result is the hierarchical Functional dataflow of Fig. 3.
+"""
+from __future__ import annotations
+
+from .ir import Graph, Op, make_dispatch, make_task
+
+#: op kinds considered "iterative" (own a loop nest / region) — paper: an op
+#: is iterative if it is a loop or a func.  For the tensor graphs we trace,
+#: every compute op carries a loop nest, while bookkeeping ops do not.
+_NON_ITERATIVE = {"const", "reshape_view", "token"}
+
+
+def is_iterative(op: Op) -> bool:
+    return op.has_region or (op.kind not in _NON_ITERATIVE
+                             and bool(op.loop_dims))
+
+
+def is_dispatchable(ops: list[Op]) -> bool:
+    """A region is dispatchable when ≥2 of its ops are iterative."""
+    return sum(1 for o in ops if is_iterative(o)) >= 2
+
+
+def _construct_region(ops: list[Op]) -> list[Op]:
+    # Bottom-up: recurse into nested regions first (post-order walk).
+    for o in ops:
+        if o.has_region:
+            o.region = _construct_region(o.region)
+    if not is_dispatchable(ops):
+        return ops
+    # Wrap each op into its own task, then all tasks into one dispatch.
+    tasks = [o if o.kind in ("task", "dispatch") else make_task([o])
+             for o in ops]
+    return [make_dispatch(tasks)]
+
+
+def construct_functional(graph: Graph) -> Graph:
+    """Paper Algorithm 1: produce the initial (maximally split) Functional
+    dataflow in-place and return the graph."""
+    graph.ops = _construct_region(graph.ops)
+    return graph

@@ -1,0 +1,214 @@
+"""Functional dataflow task fusion — paper Algorithm 2.
+
+Two phases per ``dispatch`` region, processed top-down (pre-order):
+
+1. *Pattern-driven worklist fusion*: pre-defined profitable fusion patterns
+   (e.g. matmul + element-wise epilogue, norm into the next matmul,
+   element-wise chains) are applied until no pattern matches.
+
+2. *Least-critical re-balancing*: repeatedly fuse the two least-critical
+   adjacent tasks while the fusion does not create a new critical task —
+   i.e. while ``intensity(t0)+intensity(t1) <= max_task_intensity``.  This
+   balances the dataflow (the critical task bounds pipeline throughput).
+
+Finally the dispatch/task hierarchy is canonicalised (a task owning a
+single sub-task collapses, empty dispatches disappear).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from .ir import Graph, Op, make_task
+
+
+# --------------------------------------------------------------------------
+# Fusion patterns
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FusionPattern:
+    """Profitable producer→consumer fusion pattern.
+
+    Matches when a task whose *last* leaf op has kind ``producer`` feeds a
+    task whose leaf ops all have kinds in ``consumer`` (epilogue-style
+    fusion).  ``name`` is for logging only.
+    """
+
+    name: str
+    producer: str
+    consumer: frozenset[str]
+
+    def matches(self, p: Op, c: Op) -> bool:
+        p_leaves = [o for o in p.walk() if not o.has_region]
+        c_leaves = [o for o in c.walk() if not o.has_region]
+        if not p_leaves or not c_leaves:
+            return False
+        return (p_leaves[-1].kind == self.producer
+                and all(o.kind in self.consumer for o in c_leaves))
+
+
+def default_patterns() -> list[FusionPattern]:
+    """Patterns mirroring the paper's "profitable fusion patterns" plus the
+    DNN-compiler classics (element-wise epilogues, norm folding)."""
+    ew = frozenset({"elementwise", "activation", "bias", "residual",
+                    "scale", "mask", "cast"})
+    return [
+        FusionPattern("ew-chain", "elementwise", ew),
+        FusionPattern("matmul-epilogue", "matmul", ew),
+        FusionPattern("conv-epilogue", "conv", ew),
+        FusionPattern("scan-epilogue", "scan", ew),
+        FusionPattern("attn-epilogue", "attention", ew),
+        FusionPattern("norm-into-matmul", "norm", frozenset({"matmul"})),
+        FusionPattern("router-dispatch", "router",
+                      frozenset({"moe_dispatch"})),
+        FusionPattern("gate-combine", "moe_combine", ew),
+    ]
+
+
+# --------------------------------------------------------------------------
+# Connectivity helpers (transparent regions: values flow by name)
+# --------------------------------------------------------------------------
+
+def _produces(t: Op) -> set[str]:
+    return set(t.all_outs())
+
+
+def _consumes(t: Op) -> set[str]:
+    return set(t.all_ins())
+
+
+def adjacent(a: Op, b: Op) -> bool:
+    """True when a feeds b or b feeds a through any value."""
+    return bool(_produces(a) & _consumes(b)) or bool(_produces(b) & _consumes(a))
+
+
+def _ordered(a: Op, b: Op, tasks: list[Op]) -> tuple[Op, Op]:
+    ia, ib = tasks.index(a), tasks.index(b)
+    return (a, b) if ia <= ib else (b, a)
+
+
+def _creates_cycle(tasks: list[Op], a: Op, b: Op) -> bool:
+    """Fusing a and b is illegal when a third task sits on a dataflow path
+    between them (the merged task would both feed and consume it).  This
+    matters for decode graphs: qkv → cache-update → attention must not fuse
+    qkv with attention around the cache-update node."""
+    succ: dict[int, set[int]] = {i: set() for i in range(len(tasks))}
+    prods = [_produces(t) for t in tasks]
+    cons = [_consumes(t) for t in tasks]
+    for i in range(len(tasks)):
+        for j in range(len(tasks)):
+            if i != j and prods[i] & cons[j]:
+                succ[i].add(j)
+    ia, ib = tasks.index(a), tasks.index(b)
+    for src, dst in ((ia, ib), (ib, ia)):
+        seen: set[int] = set()
+        stack = [n for n in succ[src] if n != dst]
+        while stack:
+            n = stack.pop()
+            if n in seen:
+                continue
+            seen.add(n)
+            if dst in succ[n]:
+                return True
+            stack.extend(m for m in succ[n] if m != dst)
+    return False
+
+
+# --------------------------------------------------------------------------
+# Algorithm 2
+# --------------------------------------------------------------------------
+
+@dataclass
+class FusionStats:
+    pattern_fusions: int = 0
+    balance_fusions: int = 0
+    log: list[str] = field(default_factory=list)
+
+
+def _fuse_pair(tasks: list[Op], a: Op, b: Op) -> Op:
+    """Fuse two tasks of one dispatch region into a new task, preserving
+    program order (transparent regions make this a pure re-wrap)."""
+    first, second = _ordered(a, b, tasks)
+    i = tasks.index(first)
+    merged = make_task(list(first.region) + list(second.region))
+    tasks[i] = merged
+    tasks.remove(second)
+    return merged
+
+
+def _pattern_phase(d: Op, patterns: list[FusionPattern],
+                   stats: FusionStats) -> None:
+    worklist = list(d.region)
+    while worklist:
+        t = worklist.pop(0)
+        if t not in d.region:
+            continue
+        for u in list(d.region):
+            if u is t or not adjacent(t, u) or _creates_cycle(d.region, t, u):
+                continue
+            p, c = _ordered(t, u, d.region)
+            if any(pat.matches(p, c) for pat in patterns):
+                merged = _fuse_pair(d.region, p, c)
+                stats.pattern_fusions += 1
+                stats.log.append(f"pattern: {p.name}+{c.name}->{merged.name}")
+                worklist.append(merged)
+                break
+
+
+#: tasks below this fraction of the critical intensity are "light" — the
+#: re-balancing phase only absorbs light tasks into neighbours.  Fusing two
+#: heavy tasks with different parallel dims would collapse the
+#: parallelization granularity (one unroll set per node), which on TPU
+#: means replicating one of the two matmul families — never profitable.
+LIGHT_FRACTION = 0.05
+
+
+def _balance_phase(d: Op, stats: FusionStats,
+                   max_tasks: int | None = None) -> None:
+    while len(d.region) > 1:
+        crit = max(t.intensity() for t in d.region)
+        pairs = [(a, b) for i, a in enumerate(d.region)
+                 for b in d.region[i + 1:]
+                 if adjacent(a, b) and not _creates_cycle(d.region, a, b)]
+        forced = max_tasks is not None and len(d.region) > max_tasks
+        if not forced:
+            pairs = [(a, b) for a, b in pairs
+                     if min(a.intensity(), b.intensity())
+                     <= LIGHT_FRACTION * crit]
+        if not pairs:
+            break
+        a, b = min(pairs, key=lambda p: p[0].intensity() + p[1].intensity())
+        fused_intensity = a.intensity() + b.intensity()
+        # Paper line 9: stop when fusing would create a new critical task.
+        if fused_intensity > crit and not forced:
+            break
+        merged = _fuse_pair(d.region, a, b)
+        stats.balance_fusions += 1
+        stats.log.append(f"balance: {a.name}+{b.name}->{merged.name}")
+
+
+def simplify_hierarchy(op: Op) -> Op:
+    """Canonicalise dispatch/task nesting (paper Alg. 2 line 10)."""
+    op.region = [simplify_hierarchy(c) for c in op.region]
+    # task{ task{...} } -> task{...};  dispatch{ task } -> that task's body
+    if op.kind in ("task", "dispatch") and len(op.region) == 1:
+        child = op.region[0]
+        if child.kind in ("task", "dispatch"):
+            return child
+        if op.kind == "dispatch":
+            return make_task([child], name=op.name)
+    return op
+
+
+def fuse_tasks(graph: Graph, patterns: list[FusionPattern] | None = None,
+               max_tasks: int | None = None) -> FusionStats:
+    """Paper Algorithm 2 over every dispatch in pre-order."""
+    patterns = patterns if patterns is not None else default_patterns()
+    stats = FusionStats()
+    for op in list(graph.walk(pre=True)):
+        if op.kind == "dispatch":
+            _pattern_phase(op, patterns, stats)
+            _balance_phase(op, stats, max_tasks)
+    graph.ops = [simplify_hierarchy(o) for o in graph.ops]
+    return stats

@@ -1,0 +1,490 @@
+"""HIDA-IR: hierarchical dataflow intermediate representation.
+
+This module ports the paper's two-level IR (Section 5) to a JAX-oriented
+setting:
+
+* **Functional dataflow** — ``Dispatch`` / ``Task`` operations with
+  *transparent* regions and tensor (immutable-value) semantics.  Used by the
+  algorithmic passes: dataflow construction (Alg. 1) and task fusion
+  (Alg. 2).
+
+* **Structural dataflow** — ``Schedule`` / ``Node`` operations with
+  *isolated* regions, explicit per-argument memory effects, plus ``Buffer``
+  (memory-mapped, ping-pong, carrying partition / tiling / placement
+  attributes) and ``Stream`` (FIFO) values.  Used by the
+  micro-architectural passes: multi-producer elimination (Alg. 3),
+  data-path balancing (Section 6.4.2) and IA+CA parallelization (Alg. 4).
+
+On TPU, a Structural ``Node`` becomes a region of the XLA program delimited
+by sharding-constraint sites, a ``Buffer`` becomes an activation / weight
+tensor whose ``partition`` attribute is realised as a ``PartitionSpec``,
+and a ``Stream`` becomes a pipeline staging slot.  See DESIGN.md Section 2
+for the full correspondence table.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field, replace
+from fractions import Fraction
+from typing import Callable, Iterable, Iterator, Optional, Sequence
+
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Dtypes
+# --------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "i8": 1, "u8": 1, "i16": 2, "i32": 4, "i64": 8, "bool": 1,
+    "f8_e4m3": 1, "f8_e5m2": 1,
+}
+
+
+def dtype_bytes(dtype: str) -> int:
+    return _DTYPE_BYTES[dtype]
+
+
+# --------------------------------------------------------------------------
+# Values: tensors (Functional) and buffers / streams (Structural)
+# --------------------------------------------------------------------------
+
+@dataclass
+class TensorValue:
+    """An immutable SSA tensor in the Functional dataflow.
+
+    ``dims`` names each axis with the *logical* loop dimension that produces
+    it (e.g. ``("batch", "seq", "d_model")``).  These names are what the
+    connection analysis (Section 6.5 step 1) aligns across nodes.
+    """
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: str = "bf16"
+    dims: tuple[str, ...] = ()
+    is_weight: bool = False
+
+    def __post_init__(self) -> None:
+        if self.dims and len(self.dims) != len(self.shape):
+            raise ValueError(
+                f"tensor {self.name}: dims {self.dims} rank != shape {self.shape}")
+        if not self.dims:
+            self.dims = tuple(f"d{i}" for i in range(len(self.shape)))
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64)) if self.shape else 1
+
+    @property
+    def bytes(self) -> int:
+        return self.size * dtype_bytes(self.dtype)
+
+
+class MemoryEffect:
+    """Per-argument memory effect carried by a Structural ``Node``."""
+
+    READ = "ro"
+    WRITE = "wo"
+    READ_WRITE = "rw"
+
+
+@dataclass
+class Buffer:
+    """Memory-mapped buffer (Structural dataflow).
+
+    ``stages`` is the ping-pong depth (paper Fig. 4 ``depth``); on TPU it is
+    the number of staging slots the pipeline runtime rotates through (the
+    "soft FIFO" of Section 6.4.2 uses ``stages > 2``).  ``partition`` holds
+    per-dimension ``(kind, factor)`` pairs where kind is ``cyclic`` or
+    ``block`` — realised as tiled HLO shardings.  ``tiling`` holds per-dim
+    tile sizes consumed by the Pallas kernels' BlockSpecs.  ``placement`` is
+    one of ``"onchip"`` (VMEM-resident working set), ``"hbm"`` or
+    ``"external"`` (host / DCN staged).
+    """
+
+    name: str
+    shape: tuple[int, ...]
+    dtype: str = "bf16"
+    dims: tuple[str, ...] = ()
+    stages: int = 2
+    partition: tuple[tuple[str, int], ...] = ()
+    tiling: tuple[int, ...] = ()
+    placement: str = "hbm"
+    is_weight: bool = False
+    # Set by plan.py: mesh-axis assignment per dim, e.g. (("data",), (), ("model",)).
+    spec: tuple[tuple[str, ...], ...] | None = None
+
+    def __post_init__(self) -> None:
+        if not self.dims:
+            self.dims = tuple(f"d{i}" for i in range(len(self.shape)))
+        if not self.partition:
+            self.partition = tuple(("block", 1) for _ in self.shape)
+        if not self.tiling:
+            self.tiling = tuple(self.shape)
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64)) if self.shape else 1
+
+    @property
+    def bytes(self) -> int:
+        return self.size * dtype_bytes(self.dtype)
+
+    @classmethod
+    def from_tensor(cls, t: TensorValue, **kw) -> "Buffer":
+        return cls(name=t.name, shape=t.shape, dtype=t.dtype, dims=t.dims,
+                   is_weight=t.is_weight, **kw)
+
+
+@dataclass
+class Stream:
+    """FIFO stream channel (Structural dataflow)."""
+
+    name: str
+    elem_shape: tuple[int, ...]
+    dtype: str = "bf16"
+    entries: int = 2        # FIFO depth
+    is_token: bool = False  # 1-bit token stream for elastic ordering
+
+
+# --------------------------------------------------------------------------
+# Access maps — basis of permutation / scaling maps (Section 6.5 step 1)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AccessMap:
+    """How an op's loop nest touches one tensor/buffer.
+
+    For each tensor dimension, records ``(loop_dim_name | None, stride)``:
+    ``loop_dim_name`` is the iteration dimension indexing that axis (None if
+    the access broadcasts / reduces over it) and ``stride`` is the access
+    stride as a Fraction (paper's scaling map; ``A[i*2][k]`` gives
+    stride 2 on that axis).
+    """
+
+    entries: tuple[tuple[Optional[str], Fraction], ...]
+
+    @classmethod
+    def identity(cls, dims: Sequence[str]) -> "AccessMap":
+        return cls(tuple((d, Fraction(1)) for d in dims))
+
+    @classmethod
+    def of(cls, *pairs: tuple[Optional[str], int | Fraction]) -> "AccessMap":
+        return cls(tuple((d, Fraction(s)) for d, s in pairs))
+
+    def loop_dim_for_axis(self, axis: int) -> Optional[str]:
+        return self.entries[axis][0]
+
+    def axes_for_loop_dim(self, dim: str) -> list[int]:
+        return [i for i, (d, _) in enumerate(self.entries) if d == dim]
+
+
+# --------------------------------------------------------------------------
+# Operations
+# --------------------------------------------------------------------------
+
+_uid = itertools.count()
+
+
+def fresh_name(prefix: str) -> str:
+    return f"{prefix}_{next(_uid)}"
+
+
+@dataclass
+class Op:
+    """A primitive computation in the dataflow graph.
+
+    ``loop_dims`` is the iteration space (name → trip count); ``flops`` is
+    the op intensity (Section 6.5: "number of operations contained by a
+    node"); ``access`` maps each input/output value name to an AccessMap
+    over ``loop_dims``.
+    """
+
+    name: str
+    kind: str
+    ins: list[str] = field(default_factory=list)
+    outs: list[str] = field(default_factory=list)
+    loop_dims: dict[str, int] = field(default_factory=dict)
+    flops: int = 0
+    access: dict[str, AccessMap] = field(default_factory=dict)
+    attrs: dict = field(default_factory=dict)
+    #: executions per super-block iteration — ops outside the repeated
+    #: block (embed / lm-head / loss) amortize as 1/repeat_factor so the
+    #: balancing and pipeline II reason about steady-state intensity.
+    repeat: float = 1.0
+
+    # --- region support (Tasks / Dispatches own regions) ------------------
+    region: list["Op"] = field(default_factory=list)
+
+    @property
+    def has_region(self) -> bool:
+        return bool(self.region)
+
+    def walk(self, pre: bool = True) -> Iterator["Op"]:
+        if pre:
+            yield self
+        for child in self.region:
+            yield from child.walk(pre)
+        if not pre:
+            yield self
+
+    def intensity(self) -> float:
+        """Steady-state flops (amortized by ``repeat``) incl. nested ops."""
+        own = self.flops * self.repeat
+        if not self.region:
+            return own
+        return own + sum(c.intensity() for c in self.region)
+
+    def all_ins(self) -> list[str]:
+        """Region-transitive inputs (values read, not produced inside)."""
+        if not self.region:
+            return list(self.ins)
+        produced: set[str] = set(self.outs)
+        used: list[str] = list(self.ins)
+        for c in self.region:
+            for v in c.all_ins():
+                if v not in produced and v not in used:
+                    used.append(v)
+            produced.update(c.all_outs())
+        return used
+
+    def all_outs(self) -> list[str]:
+        if not self.region:
+            return list(self.outs)
+        outs = list(self.outs)
+        for c in self.region:
+            for v in c.all_outs():
+                if v not in outs:
+                    outs.append(v)
+        return outs
+
+
+def make_task(ops: Sequence[Op], name: str | None = None) -> Op:
+    """Wrap ``ops`` into a Functional ``task`` (transparent region)."""
+    ops = list(ops)
+    return Op(name=name or fresh_name("task"), kind="task", region=ops)
+
+
+def make_dispatch(tasks: Sequence[Op], name: str | None = None) -> Op:
+    return Op(name=name or fresh_name("dispatch"), kind="dispatch",
+              region=list(tasks))
+
+
+# --------------------------------------------------------------------------
+# Graph: a module holding values + a top-level region
+# --------------------------------------------------------------------------
+
+@dataclass
+class Graph:
+    """Top-level Functional dataflow module (transparent global context)."""
+
+    name: str
+    values: dict[str, TensorValue] = field(default_factory=dict)
+    ops: list[Op] = field(default_factory=list)
+    inputs: list[str] = field(default_factory=list)
+    outputs: list[str] = field(default_factory=list)
+
+    # -- builder interface --------------------------------------------------
+    def tensor(self, name: str, shape: Sequence[int], dtype: str = "bf16",
+               dims: Sequence[str] = (), is_weight: bool = False,
+               is_input: bool = False) -> TensorValue:
+        if name in self.values:
+            raise ValueError(f"duplicate value {name}")
+        t = TensorValue(name, tuple(shape), dtype, tuple(dims), is_weight)
+        self.values[name] = t
+        if is_input or is_weight:
+            self.inputs.append(name)
+        return t
+
+    def add(self, op: Op) -> Op:
+        self.ops.append(op)
+        return op
+
+    def op(self, kind: str, ins: Sequence[str], outs: Sequence[str],
+           loop_dims: dict[str, int] | None = None, flops: int = 0,
+           access: dict[str, AccessMap] | None = None,
+           name: str | None = None, **attrs) -> Op:
+        """Create a primitive op; default access maps are identity over the
+        value's logical dims restricted to this op's loop dims."""
+        loop_dims = dict(loop_dims or {})
+        access = dict(access or {})
+        for v in list(ins) + list(outs):
+            if v not in self.values:
+                raise ValueError(f"unknown value {v}")
+            if v not in access:
+                t = self.values[v]
+                access[v] = AccessMap(tuple(
+                    (d if d in loop_dims else None, Fraction(1))
+                    for d in t.dims))
+        o = Op(name=name or fresh_name(kind), kind=kind, ins=list(ins),
+               outs=list(outs), loop_dims=loop_dims, flops=flops,
+               access=access, attrs=attrs)
+        return self.add(o)
+
+    # -- analysis ------------------------------------------------------------
+    def walk(self, pre: bool = True) -> Iterator[Op]:
+        for op in self.ops:
+            yield from op.walk(pre)
+
+    def leaf_ops(self) -> list[Op]:
+        return [o for o in self.walk() if not o.has_region]
+
+    def producers(self, value: str) -> list[Op]:
+        return [o for o in self.leaf_ops() if value in o.outs]
+
+    def consumers(self, value: str) -> list[Op]:
+        return [o for o in self.leaf_ops() if value in o.ins]
+
+    def total_flops(self) -> int:
+        return sum(o.flops for o in self.leaf_ops())
+
+
+# --------------------------------------------------------------------------
+# Structural dataflow
+# --------------------------------------------------------------------------
+
+@dataclass
+class Node:
+    """Structural dataflow node: isolated region with explicit effects.
+
+    ``args`` maps value name → MemoryEffect.  The body is the list of leaf
+    ops that were fused into this node (kept for intensity / access-map
+    queries during parallelization).  ``params`` mirrors the paper's
+    constant-parameter list (compile-time attributes).
+    """
+
+    name: str
+    args: dict[str, str] = field(default_factory=dict)
+    body: list[Op] = field(default_factory=list)
+    params: dict = field(default_factory=dict)
+    # Filled by the parallelizer: loop dim -> sharding factor, and
+    # loop dim -> mesh axes tuple.
+    unroll: dict[str, int] = field(default_factory=dict)
+    axis_map: dict[str, tuple[str, ...]] = field(default_factory=dict)
+    # Filled by balance/schedule passes.
+    stage: int = 0
+    sub_schedule: Optional["Schedule"] = None
+
+    def intensity(self) -> float:
+        return sum(o.intensity() for o in self.body)
+
+    @property
+    def repeat(self) -> float:
+        return max((o.repeat for o in self.body), default=1.0)
+
+    def loop_dims(self) -> dict[str, int]:
+        dims: dict[str, int] = {}
+        for o in self.body:
+            for d, n in o.loop_dims.items():
+                dims[d] = max(dims.get(d, 0), n)
+        return dims
+
+    def reads(self) -> list[str]:
+        return [v for v, e in self.args.items()
+                if e in (MemoryEffect.READ, MemoryEffect.READ_WRITE)]
+
+    def writes(self) -> list[str]:
+        return [v for v, e in self.args.items()
+                if e in (MemoryEffect.WRITE, MemoryEffect.READ_WRITE)]
+
+    def access_for(self, value: str) -> Optional[AccessMap]:
+        """Merged access map for ``value`` across body ops (first found)."""
+        for o in self.body:
+            if value in o.access:
+                return o.access[value]
+        return None
+
+
+@dataclass
+class TokenEdge:
+    """Elastic token-flow edge (Section 6.4.2): ``src`` must complete an
+    iteration before ``dst`` may start; realised on TPU as a data dependency
+    or an ``optimization_barrier`` for host-offload DMA ordering."""
+
+    src: str
+    dst: str
+
+
+@dataclass
+class Schedule:
+    """Structural dataflow schedule: isolated region of nodes + buffers."""
+
+    name: str
+    nodes: list[Node] = field(default_factory=list)
+    buffers: dict[str, Buffer] = field(default_factory=dict)
+    streams: dict[str, Stream] = field(default_factory=dict)
+    # Values passed in from the enclosing context (external buffers).
+    args: list[str] = field(default_factory=list)
+    outputs: list[str] = field(default_factory=list)
+    tokens: list[TokenEdge] = field(default_factory=list)
+    # Byte size of every value (incl. node-internal temporaries) — used by
+    # the estimator for intra-node reduction-collective costs.
+    value_bytes: dict[str, int] = field(default_factory=dict)
+
+    def node(self, name: str) -> Node:
+        for n in self.nodes:
+            if n.name == name:
+                return n
+        raise KeyError(name)
+
+    def is_internal(self, buf: str) -> bool:
+        """A buffer allocated inside this schedule (not an argument).
+
+        Internal buffers admit the duplication transform of Alg. 3 case (1);
+        external buffers require producer fusion (case 2)."""
+        return buf in self.buffers and buf not in self.args
+
+    def producers_of(self, buf: str) -> list[Node]:
+        return [n for n in self.nodes if buf in n.writes()]
+
+    def consumers_of(self, buf: str) -> list[Node]:
+        return [n for n in self.nodes if buf in n.reads()]
+
+    def internal_buffers(self) -> list[str]:
+        return [b for b in self.buffers if self.is_internal(b)]
+
+    def external_buffers(self) -> list[str]:
+        return [b for b in self.args if b in self.buffers]
+
+    # -- DAG helpers ---------------------------------------------------------
+    def edges(self) -> list[tuple[str, str, str]]:
+        """(src_node, dst_node, buffer) edges via shared buffers."""
+        out = []
+        for buf in self.buffers:
+            for p in self.producers_of(buf):
+                for c in self.consumers_of(buf):
+                    if p.name != c.name:
+                        out.append((p.name, c.name, buf))
+        return out
+
+    def topo_order(self) -> list[Node]:
+        """Topological order over buffer edges (stable; raises on cycles
+        between distinct nodes, ignoring self-loops from RW args)."""
+        succ: dict[str, set[str]] = {n.name: set() for n in self.nodes}
+        indeg: dict[str, int] = {n.name: 0 for n in self.nodes}
+        for s, d, _ in self.edges():
+            if d not in succ[s]:
+                succ[s].add(d)
+                indeg[d] += 1
+        order: list[Node] = []
+        ready = [n for n in self.nodes if indeg[n.name] == 0]
+        while ready:
+            n = ready.pop(0)
+            order.append(n)
+            for m in self.nodes:
+                if m.name in succ[n.name]:
+                    indeg[m.name] -= 1
+                    if indeg[m.name] == 0:
+                        ready.append(m)
+        if len(order) != len(self.nodes):
+            raise ValueError(f"schedule {self.name} has a dataflow cycle")
+        return order
+
+    def depth_of(self) -> dict[str, int]:
+        """Longest-path depth per node (for data-path balancing)."""
+        depth = {n.name: 0 for n in self.nodes}
+        for n in self.topo_order():
+            for s, d, _ in self.edges():
+                if s == n.name:
+                    depth[d] = max(depth[d], depth[n.name] + 1)
+        return depth

@@ -1,0 +1,124 @@
+"""Multi-producer elimination — paper Algorithm 3 (Section 6.4.1).
+
+Buffers written by multiple producer nodes serialise the whole dataflow.
+Two cases:
+
+* **Internal buffers** (allocated inside the schedule): duplicate the
+  buffer per extra producer — chained so each producer owns exactly one
+  copy — inserting an explicit ``copy`` at the front of a producer that
+  also *reads* the previous contents.  Uses dominated by that producer are
+  re-pointed at the duplicate.  (Safe because nothing outside the schedule
+  can observe an internal buffer.)
+
+* **External buffers** (schedule arguments): duplication is unsound (an
+  external writer could update only the original), so all producers are
+  fused into a single node and executed sequentially inside it.
+
+On TPU this pass is what legalises multi-writer streams — KV-cache slot
+updates, residual-stream accumulators, microbatch gradient accumulators —
+into SSA-friendly single-writer buffers that XLA can donate/alias, instead
+of forcing a serialised schedule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .ir import Buffer, MemoryEffect, Node, Op, Schedule, fresh_name
+
+
+@dataclass
+class MultiProducerStats:
+    duplicated: int = 0
+    copies: int = 0
+    merged: int = 0
+    log: list[str] = field(default_factory=list)
+
+
+def _rename_in_node(n: Node, old: str, new: str) -> None:
+    if old in n.args:
+        n.args[new] = n.args.pop(old)
+    for o in n.body:
+        o.ins = [new if v == old else v for v in o.ins]
+        o.outs = [new if v == old else v for v in o.outs]
+        if old in o.access:
+            o.access[new] = o.access.pop(old)
+
+
+def make_copy_op(buf: Buffer, src: str, dst: str) -> Op:
+    """An explicit memory copy over the buffer's full index space — the
+    copy iterates every axis, so it is shardable like any other node."""
+    from .ir import AccessMap
+    loop = {d: s for d, s in zip(buf.dims, buf.shape)}
+    am = AccessMap.identity(buf.dims)
+    return Op(name=fresh_name("copy"), kind="copy", ins=[src], outs=[dst],
+              loop_dims=loop, access={src: am, dst: am})
+
+
+def _insert_copy(n: Node, buf: Buffer, src: str, dst: str) -> None:
+    """Prepend an explicit memory copy ``src -> dst`` to node ``n``
+    (paper Alg. 3 lines 5-7)."""
+    n.body.insert(0, make_copy_op(buf, src, dst))
+    n.args[src] = MemoryEffect.READ
+
+
+def eliminate_multi_producers(sched: Schedule) -> MultiProducerStats:
+    stats = MultiProducerStats()
+    # Paper: producers sorted by SSA dominance — i.e. program order, not
+    # buffer-dataflow order (an RW node dominates a later W node even
+    # though the buffer edge points the other way).
+    order = {n.name: i for i, n in enumerate(sched.nodes)}
+
+    def dominates(a: Node, b: Node) -> bool:
+        return order[a.name] <= order[b.name]
+
+    # -- case (1): internal buffers → duplication ---------------------------
+    for bname in list(sched.internal_buffers()):
+        producers = sorted(sched.producers_of(bname),
+                           key=lambda n: order[n.name])
+        if len(producers) <= 1:
+            continue
+        cur = bname
+        for p in producers[1:]:
+            base = sched.buffers[bname]
+            dup_name = fresh_name(f"{bname}_dup")
+            sched.buffers[dup_name] = Buffer(
+                name=dup_name, shape=base.shape, dtype=base.dtype,
+                dims=base.dims, stages=base.stages, partition=base.partition,
+                tiling=base.tiling, placement=base.placement)
+            stats.duplicated += 1
+            reads_prev = p.args.get(cur) in (MemoryEffect.READ,
+                                             MemoryEffect.READ_WRITE)
+            # Re-point every use dominated by p (including p itself).
+            for u in sched.nodes:
+                if cur in u.args and dominates(p, u):
+                    _rename_in_node(u, cur, dup_name)
+            if reads_prev:
+                _insert_copy(p, sched.buffers[dup_name], cur, dup_name)
+                stats.copies += 1
+            stats.log.append(f"dup {cur}->{dup_name} for producer {p.name}")
+            cur = dup_name
+
+    # -- case (2): external buffers → producer fusion -----------------------
+    for bname in list(sched.external_buffers()):
+        producers = sorted(sched.producers_of(bname),
+                           key=lambda n: order[n.name])
+        if len(producers) <= 1:
+            continue
+        merged = Node(name=fresh_name("merged_node"))
+        for p in producers:
+            merged.body.extend(p.body)
+            for v, e in p.args.items():
+                prev = merged.args.get(v)
+                if prev is None:
+                    merged.args[v] = e
+                elif prev != e:
+                    merged.args[v] = MemoryEffect.READ_WRITE
+        first_idx = min(sched.nodes.index(p) for p in producers)
+        for p in producers:
+            sched.nodes.remove(p)
+        sched.nodes.insert(first_idx, merged)
+        stats.merged += len(producers)
+        stats.log.append(
+            f"merged producers {[p.name for p in producers]} of {bname} "
+            f"-> {merged.name}")
+    return stats

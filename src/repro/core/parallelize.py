@@ -1,0 +1,397 @@
+"""Intensity- and connection-aware dataflow parallelization — paper
+Section 6.5 / Algorithm 4, re-targeted from FPGA loop-unroll factors to
+TPU mesh-axis sharding factors.
+
+Steps (paper numbering):
+
+1. **Intensity & connection analysis** — per shared buffer, build the
+   permutation map (which loop level of the producer aligns with which loop
+   level of the consumer) and the scaling map (access-stride ratio).
+2. **Node sorting** — descending by connection count, intensity as the
+   tie-breaker.
+3. **Parallel factor generation** — per-node max parallel factor
+   proportional to intensity under the global budget (the chip count).
+4. **Node parallelization** — constrained DSE per node: proposals are
+   mesh-axis→loop-dim assignments (the TPU quantization of unroll
+   factors); a proposal is invalid when (a) any factor is mutually
+   indivisible with the constraint projected from an already-parallelized
+   connected node through the scaling+permutation maps, or (b) the node's
+   total parallelism exceeds its intensity-derived parallel factor.  Valid
+   proposals are scored with the roofline QoR estimator; the best one is
+   applied.
+
+Ablation switches (``ia``, ``ca``) reproduce the paper's IA-only / CA-only
+/ naive arms (Fig. 11).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+from fractions import Fraction
+from typing import Optional
+
+from .estimator import (EstimateContext, MeshSpec, estimate,
+                        node_parallel_factor)
+from .ir import Node, Schedule
+
+# Mesh-axis affinity by loop-dim name: which axes a dim may take, in
+# preference order.  Batch-like dims soak up the pure-DP axes; everything
+# else competes for the model axis (and may spill onto data/pod when the
+# batch is too small to fill them, e.g. long_500k decode with batch=1).
+_DATA_AXES = ("pod", "data")
+_DIM_AXIS_PREF: dict[str, tuple[str, ...]] = {
+    # batch never takes the model axis: mixing DP and TP on one dim breeds
+    # the resharding chains GSPMD resolves by full rematerialization.
+    # And nothing except batch takes the pod axis: TP/EP/SP across the DCN
+    # is never right at this scale.
+    "batch": ("pod", "data"),
+    "seq": ("model", "data"),
+    "kv_seq": ("model", "data"),
+}
+_DEFAULT_PREF = ("model", "data")
+
+
+def axis_pref(dim: str) -> tuple[str, ...]:
+    for key, pref in _DIM_AXIS_PREF.items():
+        if dim == key or dim.startswith(key + "_"):
+            return pref
+    return _DEFAULT_PREF
+
+
+# --------------------------------------------------------------------------
+# Step 1 — connections
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Connection:
+    """A producer→consumer link through a shared buffer (paper Table 4)."""
+
+    src: str
+    dst: str
+    buffer: str
+    # Per buffer axis: (src loop dim, src stride, dst loop dim, dst stride).
+    axes: tuple[tuple[Optional[str], Fraction, Optional[str], Fraction], ...]
+
+    def project(self, factors: dict[str, int], from_src: bool
+                ) -> dict[str, Fraction]:
+        """Project ``factors`` of one endpoint onto the other endpoint's
+        loop dims: multiply by the scaling map, permute by the permutation
+        map (Alg. 4 lines 3-8)."""
+        out: dict[str, Fraction] = {}
+        for sdim, sstride, ddim, dstride in self.axes:
+            if from_src:
+                odim, ostride, mdim, mstride = sdim, sstride, ddim, dstride
+            else:
+                odim, ostride, mdim, mstride = ddim, dstride, sdim, sstride
+            if odim is None or mdim is None:
+                continue
+            f = factors.get(odim)
+            if f is None:
+                continue
+            out[mdim] = Fraction(f) * ostride / mstride
+        return out
+
+
+def analyze_connections(sched: Schedule) -> list[Connection]:
+    conns: list[Connection] = []
+    for src, dst, bname in sched.edges():
+        p, c = sched.node(src), sched.node(dst)
+        pam, cam = p.access_for(bname), c.access_for(bname)
+        if pam is None or cam is None:
+            continue
+        axes = tuple(
+            (pam.entries[i][0], pam.entries[i][1],
+             cam.entries[i][0], cam.entries[i][1])
+            for i in range(len(pam.entries)))
+        conns.append(Connection(src, dst, bname, axes))
+    return conns
+
+
+def connection_count(sched: Schedule) -> dict[str, int]:
+    conns = analyze_connections(sched)
+    count: dict[str, int] = {n.name: 0 for n in sched.nodes}
+    for c in conns:
+        count[c.src] += 1
+        count[c.dst] += 1
+    return count
+
+
+# --------------------------------------------------------------------------
+# Step 3 — intensity-proportional parallel factors
+# --------------------------------------------------------------------------
+
+def parallel_factors(sched: Schedule, max_pf: int, ia: bool
+                     ) -> dict[str, int]:
+    """pf(node) ∝ intensity, rounded up to a power of two, capped at
+    ``max_pf`` (paper Table 5).  Without IA every node gets ``max_pf``."""
+    if not ia:
+        return {n.name: max_pf for n in sched.nodes}
+    peak = max((n.intensity() for n in sched.nodes), default=1) or 1
+    out: dict[str, int] = {}
+    for n in sched.nodes:
+        share = n.intensity() / peak
+        pf = max(1, min(max_pf, 2 ** math.ceil(math.log2(max(
+            share * max_pf, 1)))))
+        out[n.name] = pf
+    return out
+
+
+# --------------------------------------------------------------------------
+# Step 4 — constrained per-node DSE
+# --------------------------------------------------------------------------
+
+def _divisible(constraint: Fraction, factor: int) -> bool:
+    """Paper Alg. 4 line 15: mutually indivisible → invalid."""
+    if constraint <= 0:
+        return True
+    a = constraint / factor
+    b = Fraction(factor) / constraint
+    return a.denominator == 1 or b.denominator == 1
+
+
+def _shardable_dims(node: Node) -> dict[str, int]:
+    dims = node.loop_dims()
+    blocked: set[str] = set()
+    for o in node.body:
+        blocked.update(o.attrs.get("no_shard", ()))
+    return {d: s for d, s in dims.items() if s > 1 and d not in blocked}
+
+
+def _proposals(node: Node, mesh: MeshSpec, pf_cap: int
+               ) -> list[dict[str, tuple[str, ...]]]:
+    """Enumerate mesh-axis→dim assignments.  Each axis is assigned to at
+    most one loop dim (or left unused); a dim may take several axes.  The
+    factor of a dim is the product of its axes' sizes; dim size must be
+    divisible by its factor; total parallelism must not exceed ``pf_cap``
+    (Alg. 4 line 17)."""
+    dims = _shardable_dims(node)
+    axes = list(mesh.axes)
+    choices_per_axis: list[list[Optional[str]]] = []
+    for aname, asize in axes:
+        opts: list[Optional[str]] = [None]
+        for d, size in dims.items():
+            if aname in axis_pref(d):
+                opts.append(d)
+        choices_per_axis.append(opts)
+    out: list[dict[str, tuple[str, ...]]] = []
+    for combo in itertools.product(*choices_per_axis):
+        assign: dict[str, list[str]] = {}
+        for (aname, asize), d in zip(axes, combo):
+            if d is not None:
+                assign.setdefault(d, []).append(aname)
+        total = 1
+        ok = True
+        for d, alist in assign.items():
+            f = 1
+            for a in alist:
+                f *= mesh.size(a)
+            if dims[d] % f != 0:
+                ok = False
+                break
+            # TPU adaptation of the paper's parallel-factor budget: chips
+            # are not a consumable resource (unlike DSPs) — pure data
+            # parallelism over the batch dim is free, so only
+            # communication-bearing dims count against the IA budget.
+            if not (d == "batch" or d.startswith("batch_")):
+                total *= f
+        if not ok or total > pf_cap:
+            continue
+        out.append({d: tuple(a) for d, a in assign.items()})
+    return out
+
+
+def _apply(node: Node, proposal: dict[str, tuple[str, ...]],
+           mesh: MeshSpec) -> None:
+    node.axis_map = dict(proposal)
+    node.unroll = {
+        d: math.prod(mesh.size(a) for a in axes)
+        for d, axes in proposal.items()}
+
+
+@dataclass
+class ParallelizeResult:
+    order: list[str] = field(default_factory=list)
+    pf: dict[str, int] = field(default_factory=dict)
+    evaluated: int = 0
+    rejected_constraint: int = 0
+    rejected_budget: int = 0
+    log: list[str] = field(default_factory=list)
+
+
+def parallelize(sched: Schedule, mesh: MeshSpec, *,
+                max_parallel_factor: int | None = None,
+                ia: bool = True, ca: bool = True,
+                training: bool = True,
+                seed_uniform: bool = False) -> ParallelizeResult:
+    """Paper Section 6.5 steps 1-4 over a Structural schedule (in place)."""
+    res = ParallelizeResult()
+    max_pf = max_parallel_factor or mesh.chips
+    conns = analyze_connections(sched)
+    counts = connection_count(sched)
+    res.pf = parallel_factors(sched, max_pf, ia)
+    ctx = EstimateContext(sched)
+
+    # Step 2: sort by (connections, intensity) descending.
+    ordered = sorted(
+        sched.nodes,
+        key=lambda n: (counts.get(n.name, 0), n.intensity()), reverse=True)
+    res.order = [n.name for n in ordered]
+
+    def dse_node(node: Node, done: set[str]) -> bool:
+        """One constrained DSE for ``node`` (Alg. 4).  Returns True when
+        the assignment changed."""
+        constraints: list[dict[str, Fraction]] = []
+        neighbor_axes: dict[str, tuple[str, ...]] = {}
+        if ca:
+            for c in conns:
+                other = None
+                if c.src == node.name and c.dst in done:
+                    other = sched.node(c.dst)
+                    proj = c.project(other.unroll, from_src=False)
+                elif c.dst == node.name and c.src in done:
+                    other = sched.node(c.src)
+                    proj = c.project(other.unroll, from_src=True)
+                else:
+                    continue
+                constraints.append(proj)
+                # Remember which mesh axes the neighbour used on the mapped
+                # dims so the QoR tie-break prefers axis-identical layouts.
+                for sdim, _, ddim, _ in c.axes:
+                    mine = ddim if c.dst == node.name else sdim
+                    theirs = sdim if c.dst == node.name else ddim
+                    if mine and theirs and theirs in other.axis_map:
+                        neighbor_axes.setdefault(
+                            mine, other.axis_map[theirs])
+
+        prev = dict(node.axis_map)
+        best = None
+        best_key = None
+        for proposal in _proposals(node, mesh, res.pf[node.name]):
+            res.evaluated += 1
+            valid = True
+            for constr in constraints:
+                for d, cval in constr.items():
+                    uf = 1
+                    for a in proposal.get(d, ()):
+                        uf *= mesh.size(a)
+                    if not _divisible(cval, uf):
+                        valid = False
+                        break
+                if not valid:
+                    break
+            if not valid:
+                res.rejected_constraint += 1
+                continue
+            _apply(node, proposal, mesh)
+            cost = estimate(sched, mesh, training=training, ctx=ctx)
+            # Canonical-preference tie-break: count axis assignments that
+            # are not the dim's first preference (prefers data→batch,
+            # model→heads/d_ff/experts when the roofline terms tie).
+            pref_penalty = sum(
+                0 if axes and axes[0] == axis_pref(d)[0] else 1
+                for d, axes in proposal.items())
+            neigh_penalty = sum(
+                1 for d, axes in neighbor_axes.items()
+                if proposal.get(d, ()) != axes)
+            if ca:
+                key = (cost.total_s, cost.hbm_bytes_per_device,
+                       neigh_penalty, pref_penalty)
+            else:
+                # CA off: ignore the coupling cost, exactly the failure
+                # mode Fig. 11 demonstrates.
+                key = (cost.nodes[node.name].compute_s,
+                       -node_parallel_factor(node))
+            if best_key is None or key < best_key:
+                best_key, best = key, proposal
+        if best is None:
+            best = {}
+        _apply(node, best, mesh)
+        return dict(node.axis_map) != prev
+
+    # Sweep 1: the paper's greedy order (most-connected first).  Further
+    # sweeps re-run each node's DSE with *all* neighbours parallelized —
+    # coordinate descent that converges the chain onto one layout basin
+    # (greedy one-pass can lock attention into SP while the FFN picks TP,
+    # paying a reshard at every boundary).
+    done: set[str] = set()
+    for node in ordered:
+        dse_node(node, done)
+        done.add(node.name)
+    for sweep in range(3):
+        changed = 0
+        for node in ordered:
+            if dse_node(node, done):
+                changed += 1
+        res.log.append(f"sweep{sweep + 2}: {changed} nodes changed")
+        if not changed:
+            break
+
+    if seed_uniform:
+        # Beyond-paper escape hatch for coordination lock-in: per-node
+        # moves cannot leave an all-unsharded basin when each single move
+        # pays two reshard boundaries that exceed its own gain (a joint
+        # move is needed).  Evaluate a small family of *uniform* axis→dim
+        # assignments applied to every node at once; adopt the best if it
+        # beats the per-node result, then refine with two more sweeps.
+        def snapshot():
+            return {n.name: (dict(n.unroll), dict(n.axis_map))
+                    for n in sched.nodes}
+
+        def restore(state):
+            for n in sched.nodes:
+                n.unroll, n.axis_map = (dict(state[n.name][0]),
+                                        dict(state[n.name][1]))
+
+        def apply_uniform(assign: dict[str, tuple[str, ...]]):
+            for n in sched.nodes:
+                dims = _shardable_dims(n)
+                prop = {}
+                total = 1
+                for d, axes in assign.items():
+                    if d not in dims:
+                        continue
+                    f = math.prod(mesh.size(a) for a in axes)
+                    if dims[d] % f:
+                        continue
+                    if not (d == "batch" or d.startswith("batch_")):
+                        if total * f > res.pf[n.name]:
+                            continue
+                        total *= f
+                    prop[d] = axes
+                _apply(n, prop, mesh)
+
+        best_state = snapshot()
+        best_cost = estimate(sched, mesh, training=training,
+                             ctx=ctx).total_s
+        all_dims = sorted({d for n in sched.nodes
+                           for d in _shardable_dims(n)})
+        cands = []
+        for d1 in all_dims + [None]:
+            for d2 in all_dims + [None]:
+                a: dict[str, tuple[str, ...]] = {}
+                if d1 and "data" in axis_pref(d1):
+                    a[d1] = ("data",)
+                if d2 and "model" in axis_pref(d2):
+                    a[d2] = (a.get(d2, ()) + ("model",))
+                if a:
+                    cands.append(a)
+        for a in cands:
+            apply_uniform(a)
+            cost = estimate(sched, mesh, training=training, ctx=ctx).total_s
+            if cost < best_cost:
+                best_cost, best_state = cost, snapshot()
+                res.log.append(f"uniform-seed: {a} -> {cost*1e3:.2f}ms")
+        restore(best_state)
+        for sweep in range(2):
+            if not any(dse_node(n, done) for n in ordered):
+                break
+        final = estimate(sched, mesh, training=training, ctx=ctx).total_s
+        if final > best_cost:
+            restore(best_state)
+
+    for node in ordered:
+        res.log.append(
+            f"{node.name}: pf={res.pf[node.name]} "
+            f"factors={node.unroll} axes={node.axis_map}")
+    return res

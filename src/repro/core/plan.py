@@ -1,0 +1,249 @@
+"""ShardingPlan: the artifact HIDA-OPT hands to pjit.
+
+``build_plan`` converts a parallelized Structural schedule into:
+
+* ``buffer_specs`` — per Structural buffer, the mesh axes sharding each
+  tensor dimension (derived from the owning node's ``axis_map`` through its
+  access map).  Model code applies these at the corresponding
+  ``with_sharding_constraint`` sites (the TPU realisation of HIDA's buffer
+  partition attributes).
+* ``rules`` — logical-dim-name → mesh axes, the majority assignment across
+  nodes; used for tensors that are not first-class Structural buffers
+  (optimizer state, RNG keys, …).
+* ``fsdp`` — optional ZeRO-3-style extra sharding of weight buffers over
+  the unused data axes (beyond-paper feature required to fit the 100B+
+  configs in HBM; recorded separately in EXPERIMENTS.md).
+
+The plan is pure data (JSON-serialisable via ``to_json``) so dry-run
+artifacts can be diffed across perf iterations.
+"""
+from __future__ import annotations
+
+import json
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .estimator import MeshSpec
+from .ir import Schedule
+
+Axes = tuple[str, ...]
+
+
+@dataclass
+class ShardingPlan:
+    mesh_spec: MeshSpec
+    buffer_specs: dict[str, tuple[Axes, ...]] = field(default_factory=dict)
+    rules: dict[str, Axes] = field(default_factory=dict)
+    fsdp: bool = False
+    meta: dict = field(default_factory=dict)
+
+    # -- spec construction ---------------------------------------------------
+    def _dedupe(self, axes_per_dim: Sequence[Axes]) -> tuple:
+        """PartitionSpec axes must be unique; first use (leftmost dim) wins,
+        later dims drop the duplicate axis (replicate instead)."""
+        used: set[str] = set()
+        out = []
+        for axes in axes_per_dim:
+            keep = tuple(a for a in axes if a not in used)
+            used.update(keep)
+            if not keep:
+                out.append(None)
+            elif len(keep) == 1:
+                out.append(keep[0])
+            else:
+                out.append(keep)
+        while out and out[-1] is None:
+            out.pop()
+        return tuple(out)
+
+    def spec_for_dims(self, dims: Sequence[str],
+                      site: str | None = None) -> P:
+        """PartitionSpec for a tensor described by logical dim names,
+        honouring a buffer-site override when given."""
+        if site is not None and site in self.buffer_specs:
+            per_dim = self.buffer_specs[site]
+            if len(per_dim) == len(dims):
+                return P(*self._dedupe(per_dim))
+        per_dim = [self.rules.get(d, ()) for d in dims]
+        return P(*self._dedupe(per_dim))
+
+    def param_spec(self, dims: Sequence[str], site: str | None = None,
+                   shape: Sequence[int] | None = None) -> P:
+        """Weight spec; with ``fsdp`` the unused data axes additionally
+        shard a remaining dim (ZeRO-3), preferring evenly divisible dims
+        when the shape is known (avoids GSPMD padding waste)."""
+        base = self.spec_for_dims(dims, site)
+        # Expert weights are fully sharded by expert (EP widened over the
+        # data axis for big expert counts) — extra FSDP axes on their
+        # other dims would force per-layer gathers that XLA hoists out of
+        # the layer scan into a stacked multi-hundred-GiB temp.
+        if not self.fsdp or "experts" in dims:
+            return base
+        spec = list(base) + [None] * (len(dims) - len(base))
+        used = {a for entry in spec if entry
+                for a in ((entry,) if isinstance(entry, str) else entry)}
+
+        def place(axis_name: int, i: int) -> None:
+            entry = spec[i]
+            if entry is None:
+                spec[i] = axis_name
+            else:
+                cur = (entry,) if isinstance(entry, str) else tuple(entry)
+                spec[i] = cur + (axis_name,)
+            used.add(axis_name)
+
+        for axis_name in ("data", "pod"):
+            try:
+                size = self.mesh_spec.size(axis_name)
+            except KeyError:
+                continue
+            if axis_name in used:
+                continue
+            candidates = [i for i, e in enumerate(spec) if e is None]
+            candidates += [i for i in range(len(spec))
+                           if i not in candidates]
+            if shape is not None:
+                # The composed factor (existing axes × fsdp axis) must
+                # divide the dim — jit argument shardings reject padding.
+                def factor(i):
+                    e = spec[i]
+                    f = size
+                    for a in ((e,) if isinstance(e, str) else (e or ())):
+                        f *= self.mesh_spec.size(a)
+                    return f
+                candidates = [i for i in candidates
+                              if shape[i] % factor(i) == 0]
+            if candidates:
+                place(axis_name, candidates[0])
+        while spec and spec[-1] is None:
+            spec.pop()
+        return P(*spec)
+
+    # -- application ----------------------------------------------------------
+    def constrain(self, x, dims: Sequence[str], site: str | None = None):
+        """Apply a sharding constraint at a Structural buffer site.  Outside
+        a mesh context (pure-CPU smoke tests) this is a no-op."""
+        try:
+            mesh = jax.sharding.get_abstract_mesh()
+            if mesh is None or mesh.empty:
+                return x
+        except Exception:
+            return x
+        spec = self.spec_for_dims(dims, site)
+        return jax.lax.with_sharding_constraint(x, spec)
+
+    def named_sharding(self, mesh: Mesh, dims: Sequence[str],
+                       site: str | None = None, weight: bool = False,
+                       shape: Sequence[int] | None = None) -> NamedSharding:
+        spec = (self.param_spec(dims, site, shape) if weight
+                else self.spec_for_dims(dims, site))
+        return NamedSharding(mesh, spec)
+
+    # -- serialisation ----------------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps({
+            "mesh": list(self.mesh_spec.axes),
+            "buffer_specs": {k: [list(a) for a in v]
+                             for k, v in self.buffer_specs.items()},
+            "rules": {k: list(v) for k, v in self.rules.items()},
+            "fsdp": self.fsdp,
+            "meta": self.meta,
+        }, indent=2, default=str)
+
+
+def replicated_plan(mesh_spec: MeshSpec, data_axes: Axes = ("pod", "data"),
+                    fsdp: bool = False) -> ShardingPlan:
+    """The naive baseline: batch over data axes, everything else
+    replicated (what you get without the paper's technique)."""
+    rules = {"batch": tuple(a for a in data_axes
+                            if a in mesh_spec.names)}
+    return ShardingPlan(mesh_spec=mesh_spec, rules=rules, fsdp=fsdp,
+                        meta={"strategy": "naive-dp"})
+
+
+def build_plan(sched: Schedule, mesh_spec: MeshSpec,
+               fsdp: bool = False, meta: dict | None = None,
+               coherent: bool = True) -> ShardingPlan:
+    """Derive the plan from a parallelized schedule.
+
+    ``coherent=True`` (the CA-on product) projects one intensity-weighted
+    consensus rule per logical dim onto every buffer site — constraint
+    sites never disagree, so GSPMD resharding stays incremental.
+    ``coherent=False`` keeps raw per-node layouts (the CA-off ablation
+    arm); measured on deepseek-v3 train_4k this triggers GSPMD
+    "involuntary full rematerialization" and ~2.3 TiB/device of temp —
+    the TPU incarnation of the paper's Fig. 11 'flawed designs'."""
+    plan = ShardingPlan(mesh_spec=mesh_spec, fsdp=fsdp, meta=meta or {})
+
+    votes: dict[str, Counter] = {}
+    for bname, buf in sched.buffers.items():
+        producers = sched.producers_of(bname)
+        consumers = sched.consumers_of(bname)
+        owners = producers + consumers
+        if not owners:
+            continue
+        per_dim: list[Axes] = []
+        rank = len(buf.shape)
+        for axis_idx in range(rank):
+            axes: Axes = ()
+            dim = None
+            # Producer's layout wins; an unparallelized producer (e.g. the
+            # amortized embed node, pf=1) defers to its consumers so the
+            # buffer does not force a reshard at every layer boundary.
+            for node in owners:
+                am = node.access_for(bname)
+                if am is None or axis_idx >= len(am.entries):
+                    continue
+                d = am.entries[axis_idx][0]
+                if d is None:
+                    continue
+                dim = dim or d
+                a = tuple(node.axis_map.get(d, ()))
+                if a:
+                    axes = a
+                    break
+            per_dim.append(axes)
+            if dim:
+                votes.setdefault(dim, Counter())[axes] += 1
+        plan.buffer_specs[bname] = tuple(per_dim)
+        buf.spec = tuple(per_dim)
+
+    for node in sched.nodes:
+        # Intensity-weighted votes: the critical nodes decide the rules.
+        w = max(int(node.intensity() ** 0.5), 1)
+        for dim, axes in node.axis_map.items():
+            votes.setdefault(dim, Counter())[tuple(axes)] += w
+
+    for dim, counter in votes.items():
+        winner, _ = counter.most_common(1)[0]
+        if winner:
+            plan.rules[dim] = winner
+
+    if coherent:
+        project_rules(plan, sched)
+    return plan
+
+
+def project_rules(plan: ShardingPlan, sched: Schedule) -> None:
+    """Rewrite every buffer site as the projection of the consensus rules
+    — one layout basin across the whole dataflow."""
+    for bname, buf in sched.buffers.items():
+        if bname not in plan.buffer_specs:
+            continue
+        am = None
+        for node in (sched.producers_of(bname)
+                     or sched.consumers_of(bname)):
+            am = node.access_for(bname)
+            if am is not None:
+                break
+        if am is None:
+            continue
+        per_dim = tuple(
+            plan.rules.get(dim, ()) if dim else ()
+            for dim, _ in am.entries)
+        plan.buffer_specs[bname] = per_dim
+        buf.spec = per_dim

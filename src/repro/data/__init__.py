@@ -1,0 +1,3 @@
+from .pipeline import SyntheticCorpus, ShardedLoader
+
+__all__ = ["SyntheticCorpus", "ShardedLoader"]

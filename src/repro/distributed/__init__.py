@@ -1,0 +1,6 @@
+from .checkpoint import CheckpointManager
+from .elastic import gather_full_tree, reshard_checkpoint
+from .straggler import StragglerMonitor
+
+__all__ = ["CheckpointManager", "gather_full_tree", "reshard_checkpoint",
+           "StragglerMonitor"]

@@ -1,0 +1,73 @@
+"""Elastic scaling: re-stitch checkpoints across mesh/host changes.
+
+A job restarted on a different topology (16→8 hosts after failures, or
+grown back to 16) calls ``reshard_checkpoint``: every host loads the union
+of the old shards it needs and slices out its new shard.  Because the
+data loader is keyed by ``(step, shard)`` (see repro.data), the input
+stream re-partitions consistently too — no sample is lost or duplicated.
+
+For the single-process container the "hosts" are simulated shard files;
+the stitching logic is identical to the multi-host case.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+from .checkpoint import CheckpointManager, _flatten
+
+
+def gather_full_tree(directory: str | Path, step: int, like: Any) -> Any:
+    """Load + concatenate every host shard of a checkpoint along the
+    leading (data-sharded) axis when host shards differ, or verify
+    replicas agree."""
+    import ml_dtypes
+    directory = Path(directory)
+    d = directory / f"step_{step:06d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    bf16 = set(manifest.get("bf16_keys", ()))
+    shards = sorted(d.glob("shard_h*.npz"))
+    datas = [np.load(s) for s in shards]
+    named, treedef = _flatten(like)
+    leaves = []
+    for key, ref in named:
+        parts = [dt[key].view(ml_dtypes.bfloat16) if key in bf16
+                 else dt[key] for dt in datas]
+        if all(p.shape == parts[0].shape for p in parts) and len(parts) > 1:
+            same = all(np.array_equal(parts[0], p) for p in parts[1:])
+            arr = parts[0] if same else np.concatenate(parts, axis=0)
+        else:
+            arr = (parts[0] if len(parts) == 1
+                   else np.concatenate(parts, axis=0))
+        leaves.append(arr)
+    return jax.tree.unflatten(treedef, leaves)
+
+
+def reshard_checkpoint(src_dir: str | Path, step: int, like: Any,
+                       new_n_hosts: int, dst_dir: str | Path) -> None:
+    """Rewrite a committed checkpoint for a different host count.  Host
+    shards are assumed replicated (params/opt under FSDP are saved
+    replicated per host after an all-gather, or identical per host) —
+    each new host gets a full copy, sliced lazily at restore by the new
+    mesh's shardings."""
+    full = gather_full_tree(src_dir, step, like)
+    for h in range(new_n_hosts):
+        mgr = CheckpointManager(dst_dir, host_id=h, n_hosts=new_n_hosts)
+        mgr.save(step, full, blocking=True)
+
+
+def scale_batch_schedule(global_batch: int, old_hosts: int,
+                         new_hosts: int) -> dict:
+    """Keep the *global* batch invariant across rescales (per-host batch
+    changes); returns the new loader partition."""
+    if global_batch % new_hosts:
+        raise ValueError(f"global_batch {global_batch} not divisible by "
+                         f"{new_hosts} hosts")
+    return {"n_hosts": new_hosts,
+            "local_batch": global_batch // new_hosts,
+            "note": f"rescaled from {old_hosts} hosts; global batch and "
+                    f"data stream unchanged"}

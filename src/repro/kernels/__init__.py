@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel package ships ``kernel.py`` (pl.pallas_call + explicit
+BlockSpec VMEM tiling), ``ops.py`` (jit'd public wrapper) and ``ref.py``
+(pure-jnp oracle).  On this CPU container kernels are validated with
+``interpret=True``; on TPU the same BlockSpecs drive MXU/VMEM execution.
+"""

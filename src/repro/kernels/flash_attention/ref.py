@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True,
+                  window: int | None = None) -> jax.Array:
+    """q (BH, G, Sq, Dh); k (BH, Skv, Dh); v (BH, Skv, Dv)."""
+    BH, G, Sq, Dh = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bgqd,bkd->bgqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(Dh)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = kpos <= qpos
+    if window is not None:
+        mask = mask & (kpos > qpos - window)
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgqk,bkd->bgqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

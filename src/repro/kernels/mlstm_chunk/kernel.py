@@ -1,0 +1,110 @@
+"""xLSTM mLSTM chunkwise Pallas TPU kernel.
+
+Grid: (batch·heads, chunks) with the chunk dimension sequential,
+carrying the (Dh, Dh) matrix memory C, the normaliser n (Dh,), and the
+stabiliser m (scalar) in VMEM scratch.  Per chunk:
+
+* intra-chunk: the (L, L) decay-masked qkᵀ quadratic — two MXU matmuls,
+* inter-chunk: q reads the carried matrix memory with cumulative decay,
+* state update: rank-L update of C with per-step forget products.
+
+The stabilised exponential gating (max-subtraction) follows the xLSTM
+paper's log-space formulation so f32 accumulation never overflows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, y_ref,
+                  c_ref, n_ref, m_ref, *, chunk: int, dh: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+
+    q = q_ref[0].astype(jnp.float32)                 # (L, Dh)
+    k = k_ref[0].astype(jnp.float32) / (dh ** 0.5)   # xLSTM: scale k only
+    v = v_ref[0].astype(jnp.float32)
+    i_p = i_ref[0].astype(jnp.float32)               # (L,)
+    logf = jax.nn.log_sigmoid(f_ref[0].astype(jnp.float32))
+
+    F = jnp.cumsum(logf)                             # (L,) inclusive
+    m_prev = m_ref[0, 0]
+    # Stabiliser candidates: inter-chunk (m_prev + F_t) vs intra (D row max)
+    L = q.shape[0]
+    tpos = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    spos = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    # D[t,s] = F_t - F_s + i_s for s<=t
+    dmat = F[:, None] - F[None, :] + i_p[None, :]
+    dmat = jnp.where(spos <= tpos, dmat, NEG)
+    m_intra = jnp.max(dmat, axis=1)                  # (L,)
+    m_t = jnp.maximum(m_prev + F, m_intra)
+
+    inter_decay = jnp.exp(m_prev + F - m_t)          # (L,)
+    dexp = jnp.exp(dmat - m_t[:, None])              # (L, L)
+
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    w = scores * dexp
+    y_intra = jax.lax.dot_general(w, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_inter = (q @ c_ref[...]) * inter_decay[:, None]
+    num = y_intra + y_inter
+    n_inter = (q @ n_ref[...][:, None])[:, 0] * inter_decay
+    denom = jnp.sum(w, axis=1) + n_inter
+    denom = jnp.maximum(jnp.abs(denom), jnp.exp(-m_t)) + 1e-6
+    y_ref[0, ...] = (num / denom[:, None]).astype(y_ref.dtype)
+
+    # ---- state update to end of chunk --------------------------------------
+    m_new = m_t[-1]
+    F_last = F[-1]
+    # contribution of each step s: exp(F_last - F_s + i_s - m_new)
+    upd = jnp.exp(F_last - F + i_p - m_new)          # (L,)
+    decay_all = jnp.exp(m_prev + F_last - m_new)
+    c_ref[...] = decay_all * c_ref[...] + jax.lax.dot_general(
+        k * upd[:, None], v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_ref[...] = decay_all * n_ref[...] + jnp.sum(k * upd[:, None], axis=0)
+    m_ref[0, 0] = m_new
+
+
+def mlstm_chunk(q, k, v, i_pre, f_pre, *, chunk: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """q,k,v (BH, S, Dh); i_pre,f_pre (BH, S) → y (BH, S, Dh) f32."""
+    BH, S, Dh = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    kern = functools.partial(_mlstm_kernel, chunk=chunk, dh=Dh)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, Dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, Dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, Dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, Dh), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, Dh), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((Dh, Dh), jnp.float32),
+            pltpu.VMEM((Dh,), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, i_pre, f_pre)

@@ -1,0 +1,12 @@
+"""Oracle: the models/xlstm.py parallel form over the full sequence."""
+import jax.numpy as jnp
+
+from repro.models.xlstm import _mlstm_parallel
+
+
+def mlstm_ref(q, k, v, i_pre, f_pre):
+    """q,k,v (BH,S,Dh); i/f (BH,S) → (BH,S,Dh) f32."""
+    BH, S, Dh = q.shape
+    y = _mlstm_parallel(q[:, :, None], k[:, :, None], v[:, :, None],
+                        i_pre[:, :, None], f_pre[:, :, None])
+    return y[:, :, 0].astype(jnp.float32)

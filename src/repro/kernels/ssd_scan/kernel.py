@@ -1,0 +1,81 @@
+"""Mamba selective-scan Pallas TPU kernel (chunked SSD form).
+
+Grid: (batch, d_inner_blocks, chunks) — chunks iterate sequentially
+("arbitrary"), carrying the (d_block, N) SSM state in VMEM scratch across
+chunk steps; batch and channel blocks are parallel.  Within a chunk the
+recurrence runs as a fori_loop entirely in VMEM/VREGs: the HBM traffic is
+exactly one read of (x, dt, B, C) and one write of y per token — the
+memory-optimal dataflow for the recurrence (it is memory-bound: ~6·N
+flops per element against ~8 bytes moved).
+
+Channel blocking keeps the VMEM working set at
+chunk·d_block·(2+N/…) ≪ 16 MiB and d_block a lane multiple (128).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+                chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)       # (chunk, d_block)
+    dt = dt_ref[0].astype(jnp.float32)     # (chunk, d_block)
+    A = a_ref[...].astype(jnp.float32)     # (d_block, N)
+    Bm = b_ref[0].astype(jnp.float32)      # (chunk, N)
+    Cm = c_ref[0].astype(jnp.float32)      # (chunk, N)
+
+    def step(t, carry):
+        h, y = carry
+        dA = jnp.exp(dt[t][:, None] * A)               # (d_block, N)
+        h = dA * h + (dt[t] * x[t])[:, None] * Bm[t][None, :]
+        y = y.at[t].set(h @ Cm[t])                     # (d_block,)
+        return h, y
+
+    h0 = h_ref[...]
+    y0 = jnp.zeros((chunk, x.shape[1]), jnp.float32)
+    h, y = jax.lax.fori_loop(0, chunk, step, (h0, y0))
+    h_ref[...] = h
+    y_ref[0, ...] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, *, chunk: int = 128, d_block: int = 128,
+             interpret: bool = True) -> jax.Array:
+    """x, dt (B,S,Din); A (Din,N); Bm,Cm (B,S,N) → y (B,S,Din) f32."""
+    B, S, Din = x.shape
+    N = A.shape[-1]
+    chunk = min(chunk, S)
+    d_block = min(d_block, Din)
+    assert S % chunk == 0 and Din % d_block == 0
+    nc, nd = S // chunk, Din // d_block
+
+    kern = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kern,
+        grid=(B, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d_block), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((1, chunk, d_block), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((d_block, N), lambda b, d, c: (d, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, d_block),
+                               lambda b, d, c: (b, c, d)),
+        out_shape=jax.ShapeDtypeStruct((B, S, Din), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((d_block, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

@@ -1,0 +1,7 @@
+"""Oracle: the sequential selective scan (models/ssm.py step form)."""
+from repro.models.ssm import selective_scan_seq
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm):
+    y, _ = selective_scan_seq(x, dt, A, Bm, Cm)
+    return y

@@ -1,0 +1,165 @@
+"""Post-SPMD HLO analysis: collective-byte accounting for §Roofline.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+compiled (post-optimization, per-device) HLO text and sum operand bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.
+
+HLO cost analysis counts a ``while`` body ONCE regardless of trip count —
+and the layer scan is a while loop.  We therefore split collective bytes
+into *top-level* vs *loop-resident* (computations reachable from any
+``while`` body/condition): the caller scales loop-resident bytes by the
+known layer-scan trip count.  Bytes are per-device.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_CALL_REF = re.compile(
+    r"(?:body|condition|to_apply|calls|branch_computations=\{)[=\s]*"
+    r"(%[\w\.\-]+(?:\s*,\s*%[\w\.\-]+)*)")
+_WHILE_REF = re.compile(r"condition=(%[\w\.\-]+), body=(%[\w\.\-]+)")
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)?\s*"
+    r"(" + "|".join(COLLECTIVE_OPS) + r")(-start|-done)?[\.\d]*\(")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+    loop_bytes_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def top_bytes(self) -> int:
+        return (sum(self.bytes_by_kind.values())
+                - sum(self.loop_bytes_by_kind.values()))
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def scaled_total(self, loop_trip: int) -> int:
+        """Total per-device bytes with loop-resident collectives scaled by
+        the layer-scan trip count."""
+        return self.top_bytes + loop_trip * sum(
+            self.loop_bytes_by_kind.values())
+
+    def to_dict(self, loop_trip: int = 1) -> dict:
+        return {"bytes_by_kind": self.bytes_by_kind,
+                "count_by_kind": self.count_by_kind,
+                "loop_bytes_by_kind": self.loop_bytes_by_kind,
+                "top_bytes": self.top_bytes,
+                "total_bytes": self.total_bytes,
+                "loop_trip": loop_trip,
+                "scaled_total_bytes": self.scaled_total(loop_trip)}
+
+
+def _parse_computations(hlo_text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = "%__toplevel__"
+    comps[cur] = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _COMP_HDR.match(line)  # headers start at column 0
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+        comps[cur].append(stripped)
+    return comps
+
+
+def _loop_reachable(comps: dict[str, list[str]]) -> set[str]:
+    """Computations executed under any while (bodies, conditions, and
+    everything they call)."""
+    calls: dict[str, set[str]] = {c: set() for c in comps}
+    roots: set[str] = set()
+    for cname, lines in comps.items():
+        for line in lines:
+            for m in _WHILE_REF.finditer(line):
+                roots.add(m.group(1))
+                roots.add(m.group(2))
+            for m in _CALL_REF.finditer(line):
+                for ref in re.findall(r"%[\w\.\-]+", m.group(1)):
+                    calls[cname].add(ref)
+    seen: set[str] = set()
+    stack = [r for r in roots if r in comps]
+    while stack:
+        c = stack.pop()
+        if c in seen:
+            continue
+        seen.add(c)
+        stack.extend(r for r in calls.get(c, ()) if r in comps and
+                     r not in seen)
+    return seen
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    comps = _parse_computations(hlo_text)
+    in_loop = _loop_reachable(comps)
+    for cname, lines in comps.items():
+        loop = cname in in_loop
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if not m:
+                continue
+            if m.group(3) == "-done":
+                continue  # async completion: payload counted at -start
+            kind = m.group(2)
+            payload = m.group(1) or ""
+            nbytes = _shape_bytes(payload)
+            if nbytes == 0:
+                nbytes = _shape_bytes(line.split("(", 1)[0])
+            if kind == "all-gather" and m.group(3) == "-start":
+                # (operand, result) tuple: count the gathered result only
+                nbytes = nbytes // 2 if nbytes else nbytes
+            stats.bytes_by_kind[kind] = (
+                stats.bytes_by_kind.get(kind, 0) + nbytes)
+            stats.count_by_kind[kind] = (
+                stats.count_by_kind.get(kind, 0) + 1)
+            if loop:
+                stats.loop_bytes_by_kind[kind] = (
+                    stats.loop_bytes_by_kind.get(kind, 0) + nbytes)
+    return stats
+
+
+def hlo_op_histogram(hlo_text: str, top: int = 20) -> list[tuple[str, int]]:
+    """Opcode frequency — spotting remat-duplicated fusions and reshape
+    storms during §Perf iterations."""
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        rhs = line.split("=", 1)[1].strip()
+        m = re.match(r"(?:\([^)]*\)\s*|[a-z0-9]+\[[0-9,]*\][^ ]*\s+)?"
+                     r"([a-z][a-z0-9-]*)[\.\d]*\(", rhs)
+        if m:
+            counts[m.group(1)] = counts.get(m.group(1), 0) + 1
+    return sorted(counts.items(), key=lambda kv: -kv[1])[:top]

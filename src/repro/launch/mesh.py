@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module does not touch jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and only then builds the mesh.
+"""
+from __future__ import annotations
+
+import jax
+
+from ..core.estimator import MULTI_POD, SINGLE_POD, MeshSpec
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_spec(multi_pod: bool = False) -> MeshSpec:
+    return MULTI_POD if multi_pod else SINGLE_POD
+
+
+def make_host_mesh(shape: tuple[int, ...] = None,
+                   axes: tuple[str, ...] = ("data", "model")):
+    """Small mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n, 1)
+    return jax.make_mesh(shape, axes)

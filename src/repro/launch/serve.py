@@ -1,0 +1,91 @@
+"""Batched serving driver: prefill a prompt batch, then decode with the
+KV / SSM / xLSTM caches (deliverable b).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m \
+        --smoke --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, list_archs
+from ..models.lm import LM
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m", choices=list_archs())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    lm = LM(cfg, remat="none")
+    rng = jax.random.PRNGKey(args.seed)
+    params, _ = lm.init(rng)
+
+    B = args.batch
+    S_max = args.prompt_len + args.gen
+    prompts = jax.random.randint(rng, (B, args.prompt_len), 0, cfg.vocab)
+
+    # Prefill: replay the prompt through decode_step to fill caches (an
+    # incremental server; the fused full-sequence prefill path is
+    # exercised by the prefill_32k dry-run cells).
+    caches = lm.init_caches(B, S_max)
+    step = jax.jit(lm.decode_step)
+    t0 = time.perf_counter()
+    logits = None
+    for t in range(args.prompt_len):
+        batch = {"pos": jnp.asarray(t, jnp.int32)}
+        if cfg.frontend == "audio_frames":
+            batch["frames"] = jax.random.normal(
+                rng, (B, 1, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = prompts[:, t:t + 1]
+        if cfg.frontend == "vision":
+            batch["img_embeds"] = jax.random.normal(
+                rng, (B, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+        logits, caches = step(params, batch, caches)
+    prefill_s = time.perf_counter() - t0
+
+    out_tokens = []
+    t0 = time.perf_counter()
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    for t in range(args.prompt_len, args.prompt_len + args.gen):
+        batch = {"pos": jnp.asarray(t, jnp.int32)}
+        if cfg.frontend == "audio_frames":
+            batch["frames"] = jax.random.normal(
+                rng, (B, 1, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = tok
+        if cfg.frontend == "vision":
+            batch["img_embeds"] = jax.random.normal(
+                rng, (B, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+        logits, caches = step(params, batch, caches)
+        if args.temperature > 0:
+            rng, sub = jax.random.split(rng)
+            tok = jax.random.categorical(
+                sub, logits[:, -1] / args.temperature)[:, None]
+        else:
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out_tokens.append(np.asarray(tok[:, 0]))
+    decode_s = time.perf_counter() - t0
+    toks = args.gen * B
+    print(f"[serve] {args.arch}: prefill {args.prompt_len} toks in "
+          f"{prefill_s:.2f}s; decoded {toks} tokens in {decode_s:.2f}s "
+          f"({toks/decode_s:.1f} tok/s)")
+    return {"tok_per_s": toks / decode_s,
+            "tokens": np.stack(out_tokens, 1)}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Model zoo: all assigned architectures assembled from shared blocks."""
+from .attention import KVCache, gqa_attention, mla_attention
+from .layers import ParamBuilder, cross_entropy, rms_norm
+from .lm import LM
+from .moe import moe_ffn, router_topk
+from .ssm import mamba_block, selective_scan_assoc, selective_scan_seq
+from .xlstm import mlstm_block, slstm_block
+
+__all__ = ["LM", "KVCache", "gqa_attention", "mla_attention",
+           "ParamBuilder", "cross_entropy", "rms_norm", "moe_ffn",
+           "router_topk", "mamba_block", "selective_scan_assoc",
+           "selective_scan_seq", "mlstm_block", "slstm_block"]

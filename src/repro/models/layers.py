@@ -1,0 +1,186 @@
+"""Shared layers: norms, SwiGLU MLP, rotary embeddings, parameter builder.
+
+Everything is functional JAX (params as pytrees).  ``ParamBuilder``
+records the logical dims + HIDA buffer site of every parameter so the
+launcher can derive ``NamedSharding``s for the whole tree from the
+ShardingPlan without hand-written PartitionSpecs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BF16 = jnp.bfloat16
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# Parameter builder (records logical dims for plan-driven sharding)
+# --------------------------------------------------------------------------
+
+@dataclass
+class ParamBuilder:
+    rng: jax.Array | None
+    params: dict = field(default_factory=dict)
+    dims: dict = field(default_factory=dict)
+    #: abstract mode: record ShapeDtypeStructs only (dry-run; no HBM)
+    abstract: bool = False
+
+    def _split(self) -> jax.Array:
+        self.rng, sub = jax.random.split(self.rng)
+        return sub
+
+    def weight(self, path: str, shape: Sequence[int], dims: Sequence[str],
+               dtype=BF16, scale: float | None = None,
+               stack: int | None = None) -> None:
+        """Register a weight; ``stack`` prepends a layer-stack axis for
+        scanned groups (dims gets a leading "layers")."""
+        shape = tuple(shape)
+        fan_in = shape[0] if shape else 1
+        std = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+        full = (stack,) + shape if stack else shape
+        full_dims = (("layers",) + tuple(dims)) if stack else tuple(dims)
+        if self.abstract:
+            leaf = jax.ShapeDtypeStruct(full, dtype)
+        else:
+            leaf = (jax.random.normal(self._split(), full, F32) * std
+                    ).astype(dtype)
+        _set(self.params, path, leaf)
+        _set(self.dims, path, full_dims)
+
+    def _const(self, fn, path, shape, dims, dtype, stack):
+        full = ((stack,) + tuple(shape)) if stack else tuple(shape)
+        full_dims = (("layers",) + tuple(dims)) if stack else tuple(dims)
+        leaf = (jax.ShapeDtypeStruct(full, dtype) if self.abstract
+                else fn(full, dtype))
+        _set(self.params, path, leaf)
+        _set(self.dims, path, full_dims)
+
+    def ones(self, path: str, shape: Sequence[int], dims: Sequence[str],
+             dtype=F32, stack: int | None = None) -> None:
+        self._const(jnp.ones, path, shape, dims, dtype, stack)
+
+    def zeros(self, path: str, shape: Sequence[int], dims: Sequence[str],
+              dtype=F32, stack: int | None = None) -> None:
+        self._const(jnp.zeros, path, shape, dims, dtype, stack)
+
+
+def _set(tree: dict, path: str, leaf: Any) -> None:
+    keys = path.split("/")
+    for k in keys[:-1]:
+        tree = tree.setdefault(k, {})
+    tree[keys[-1]] = leaf
+
+
+def tree_get(tree: dict, path: str) -> Any:
+    for k in path.split("/"):
+        tree = tree[k]
+    return tree
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(F32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * scale.astype(F32)
+    return y.astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(F32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(F32) + bias.astype(F32)
+    return y.astype(dtype)
+
+
+def apply_norm(kind: str, x: jax.Array, p: dict) -> jax.Array:
+    if kind == "rms":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def init_norm(pb: ParamBuilder, path: str, kind: str, d: int,
+              stack: int | None = None) -> None:
+    pb.ones(f"{path}/scale", (d,), ("d_model",), stack=stack)
+    if kind != "rms":
+        pb.zeros(f"{path}/bias", (d,), ("d_model",), stack=stack)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings (with partial-rotary support)
+# --------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, rot_dim: int,
+                base: float = 10000.0) -> tuple[jax.Array, jax.Array]:
+    """positions (..., S) → cos/sin (..., S, rot_dim//2)."""
+    inv = 1.0 / (base ** (np.arange(0, rot_dim, 2) / rot_dim))
+    ang = positions[..., None].astype(F32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
+               rot_dim: int) -> jax.Array:
+    """x (B,S,H,Dh); rotate the first ``rot_dim`` features (partial RoPE),
+    pass the rest through (StableLM-style 25% rotary supported)."""
+    rot, rest = x[..., :rot_dim], x[..., rot_dim:]
+    r1, r2 = rot[..., 0::2], rot[..., 1::2]
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    o1 = r1 * cos - r2 * sin
+    o2 = r2 * cos + r1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(rot.shape)
+    return jnp.concatenate([out.astype(x.dtype), rest], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(pb: ParamBuilder, path: str, d: int, d_ff: int,
+             stack: int | None = None) -> None:
+    pb.weight(f"{path}/w_in", (d, 2, d_ff), ("d_model", "two", "d_ff"),
+              stack=stack)
+    pb.weight(f"{path}/w_out", (d_ff, d), ("d_ff", "d_model"), stack=stack)
+
+
+def mlp(x: jax.Array, p: dict, constrain=lambda t, d, s=None: t
+        ) -> jax.Array:
+    h = jnp.einsum("bsd,dgf->bsgf", x, p["w_in"])
+    h = constrain(h, ("batch", "seq", None, "d_ff"), "ffn_hidden")
+    gate, up = h[..., 0, :], h[..., 1, :]
+    act = jax.nn.silu(gate.astype(F32)).astype(x.dtype) * up
+    out = jnp.einsum("bsf,fd->bsd", act, p["w_out"])
+    return out
+
+
+# --------------------------------------------------------------------------
+# Loss (vocab-sharding friendly: stable logsumexp, no host gather)
+# --------------------------------------------------------------------------
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 1e-4) -> jax.Array:
+    """Mean token cross-entropy with optional z-loss (router-style logit
+    regularisation).  Written as reductions XLA SPMD partitions cleanly
+    when the vocab dim is model-sharded."""
+    logits = logits.astype(F32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    loss = jnp.mean(nll)
+    if z_loss:
+        loss = loss + z_loss * jnp.mean(jnp.square(lse))
+    return loss

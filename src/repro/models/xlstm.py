@@ -1,0 +1,194 @@
+"""xLSTM blocks [arXiv:2405.04517].
+
+* **mLSTM** — matrix-memory LSTM ≈ gated linear attention.  Parallel
+  chunkwise form for train/prefill (intra-chunk quadratic + inter-chunk
+  state recurrence), step form for decode.  The sequence dim is
+  chunk-parallelizable, so HIDA may shard it.
+* **sLSTM** — scalar-memory LSTM with exponential gating and a stabiliser
+  state.  The recurrence feeds h_{t-1} back through the gate
+  pre-activations, so it is *sequence-sequential* (``lax.scan``); the
+  graph marks ``seq`` non-shardable for this node — the paper's ∅
+  permutation-map entry.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import BF16, F32, ParamBuilder
+
+Constrain = Callable[..., jax.Array]
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # (B,H,Dh,Dh) matrix memory
+    n: jax.Array   # (B,H,Dh)    normaliser
+    m: jax.Array   # (B,H)       stabiliser
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B,D)
+    n: jax.Array   # (B,D)
+    h: jax.Array   # (B,D)
+    m: jax.Array   # (B,D)
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+def init_mlstm(pb: ParamBuilder, path: str, cfg: ArchConfig,
+               stack: int | None = None) -> None:
+    x = cfg.xlstm
+    D = cfg.d_model
+    Din = x.proj_factor_mlstm * D
+    pb.weight(f"{path}/w_up", (D, 2 * Din), ("d_model", "d_inner"),
+              stack=stack)
+    pb.weight(f"{path}/w_qkv", (Din, 3, Din), ("d_inner", "three",
+                                               "d_inner2"), stack=stack)
+    pb.weight(f"{path}/w_if", (Din, 2, cfg.n_heads),
+              ("d_inner", "two", "heads"), scale=0.01, stack=stack)
+    pb.weight(f"{path}/w_down", (Din, D), ("d_inner", "d_model"),
+              stack=stack)
+
+
+def _mlstm_parallel(q, k, v, i_pre, f_pre):
+    """Stabilised parallel form over the full sequence (quadratic): used
+    per chunk.  q,k,v (B,S,H,Dh); i_pre,f_pre (B,S,H)."""
+    B, S, H, Dh = q.shape
+    logf = jax.nn.log_sigmoid(f_pre.astype(F32))           # (B,S,H)
+    F_cum = jnp.cumsum(logf, axis=1)
+    # D[s,t] = sum_{r=t+1..s} logf_r + i_t  for t<=s
+    dmat = (F_cum[:, :, None] - F_cum[:, None, :]
+            + i_pre.astype(F32)[:, None, :, :])            # (B,S,T,H)
+    tpos = jnp.arange(S)
+    causal = tpos[None, :, None] >= tpos[None, None, :]
+    dmat = jnp.where(causal[..., None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)               # (B,S,1,H)
+    dexp = jnp.exp(dmat - m)
+    scores = jnp.einsum("bshd,bthd->bsth", q.astype(F32),
+                        k.astype(F32)) / (Dh ** 0.5)
+    w = scores * dexp
+    norm = jnp.maximum(jnp.abs(jnp.sum(w, axis=2)), jnp.exp(-m[:, :, 0]))
+    y = jnp.einsum("bsth,bthd->bshd", w, v.astype(F32))
+    return y / (norm[..., None] + 1e-6)
+
+
+def mlstm_block(x: jax.Array, p: dict, cfg: ArchConfig,
+                constrain: Constrain,
+                state: Optional[MLSTMState] = None,
+                use_kernels: bool = False):
+    xc = cfg.xlstm
+    D = cfg.d_model
+    Din = xc.proj_factor_mlstm * D
+    H = cfg.n_heads
+    Dh = Din // H
+    B, S, _ = x.shape
+
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    up = constrain(up, ("batch", "seq", "d_inner"), "up")
+    xin, z = up[..., :Din], up[..., Din:]
+    qkv = jnp.einsum("bse,egf->bsgf", xin, p["w_qkv"])
+    q, k, v = (qkv[:, :, i].reshape(B, S, H, Dh) for i in range(3))
+    if_pre = jnp.einsum("bse,egh->bsgh", xin, p["w_if"])
+    i_pre, f_pre = if_pre[:, :, 0], if_pre[:, :, 1]
+
+    if state is not None:
+        # Step form: exponential-gated rank-1 update of the matrix memory.
+        logf = jax.nn.log_sigmoid(f_pre.astype(F32))[:, 0]      # (B,H)
+        i_t = i_pre.astype(F32)[:, 0]
+        m_new = jnp.maximum(logf + state.m, i_t)
+        fg = jnp.exp(logf + state.m - m_new)[..., None]
+        ig = jnp.exp(i_t - m_new)[..., None]
+        kt = k.astype(F32)[:, 0] / (Dh ** 0.5)
+        vt = v.astype(F32)[:, 0]
+        C = fg[..., None] * state.C + ig[..., None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = fg * state.n + ig * kt
+        qt = q.astype(F32)[:, 0]
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n)),
+                          jnp.exp(-m_new))[..., None]
+        y = (num / (den + 1e-6))[:, None].reshape(B, 1, Din)
+        new_state = MLSTMState(C, n, m_new)
+    elif use_kernels:
+        from ..kernels.mlstm_chunk import ops as mlstm_ops
+        y = mlstm_ops.mlstm_chunk(q, k, v, i_pre, f_pre,
+                                  chunk=xc.chunk).reshape(B, S, Din)
+        new_state = None
+    else:
+        # Chunkless parallel reference (quadratic in S) for short
+        # sequences; chunked execution happens in the Pallas kernel.
+        y = _mlstm_parallel(q, k, v, i_pre, f_pre).reshape(B, S, Din)
+        new_state = None
+
+    y = (y * jax.nn.silu(z.astype(F32))).astype(x.dtype)
+    y = constrain(y, ("batch", "seq", "d_inner"), "scan_out")
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"])
+    if state is not None:
+        return out, new_state
+    return out
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+def init_slstm(pb: ParamBuilder, path: str, cfg: ArchConfig,
+               stack: int | None = None) -> None:
+    x = cfg.xlstm
+    D = cfg.d_model
+    pb.weight(f"{path}/w_gates", (D, 4, D), ("d_model", "four", "d_inner"),
+              stack=stack)
+    pb.weight(f"{path}/r_gates", (D, 4, D), ("d_model", "four", "d_inner"),
+              scale=0.01, stack=stack)
+    if x.d_ff_slstm:
+        pb.weight(f"{path}/w_ffn_in", (D, 2, x.d_ff_slstm),
+                  ("d_model", "two", "d_ff"), stack=stack)
+        pb.weight(f"{path}/w_ffn_out", (x.d_ff_slstm, D),
+                  ("d_ff", "d_model"), stack=stack)
+
+
+def _slstm_step(p: dict, state: SLSTMState, x_t: jax.Array) -> tuple:
+    """One exponential-gated sLSTM step; x_t (B,D)."""
+    pre = (jnp.einsum("bd,dge->bge", x_t.astype(F32), p["w_gates"].astype(F32))
+           + jnp.einsum("bd,dge->bge", state.h, p["r_gates"].astype(F32)))
+    i_p, f_p, z_p, o_p = (pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3])
+    logf = jax.nn.log_sigmoid(f_p)
+    m_new = jnp.maximum(logf + state.m, i_p)
+    ig = jnp.exp(i_p - m_new)
+    fg = jnp.exp(logf + state.m - m_new)
+    z = jnp.tanh(z_p)
+    c = fg * state.c + ig * z
+    n = fg * state.n + ig
+    h = jax.nn.sigmoid(o_p) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c, n, h, m_new), h
+
+
+def slstm_block(x: jax.Array, p: dict, cfg: ArchConfig,
+                constrain: Constrain,
+                state: Optional[SLSTMState] = None):
+    B, S, D = x.shape
+    s0 = state if state is not None else SLSTMState(
+        *(jnp.zeros((B, D), F32) for _ in range(3)),
+        jnp.full((B, D), -1e30, F32))
+
+    def step(carry, x_t):
+        new, h = _slstm_step(p, carry, x_t)
+        return new, h
+
+    final, hs = jax.lax.scan(step, s0, x.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)
+    y = constrain(y, ("batch", "seq", "d_model"), "scan_out")
+
+    if "w_ffn_in" in p:
+        h = jnp.einsum("bsd,dgf->bsgf", y, p["w_ffn_in"])
+        act = jax.nn.silu(h[..., 0, :].astype(F32)).astype(x.dtype) \
+            * h[..., 1, :]
+        y = jnp.einsum("bsf,fd->bsd", act, p["w_ffn_out"])
+    if state is not None:
+        return y, final
+    return y

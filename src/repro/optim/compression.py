@@ -1,0 +1,76 @@
+"""Int8 error-feedback gradient compression for the DP sync path.
+
+Classic EF-SGD / 1-bit-Adam style: quantize each gradient leaf to int8
+with a per-leaf scale before the data-parallel all-reduce, keep the
+quantization residual locally, and add it back into the next step's
+gradient.  Cuts DP sync bytes 4× (f32) / 2× (bf16) with provably bounded
+error accumulation (the residual feedback makes compression unbiased in
+the long run).
+
+Usage inside a shard_map'd DP sync, or around the optimizer when XLA owns
+the all-reduce (compress → decompress models the wire format; the actual
+byte saving on TPU comes from the shard_map variant in
+``examples/compressed_dp.py``).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any          # same pytree as grads, f32
+
+
+def init_ef_state(grads_like: Any) -> EFState:
+    return EFState(jax.tree.map(
+        lambda g: (jax.ShapeDtypeStruct(g.shape, jnp.float32)
+                   if isinstance(g, jax.ShapeDtypeStruct)
+                   else jnp.zeros(g.shape, jnp.float32)), grads_like))
+
+
+def compress(g: jax.Array, residual: jax.Array
+             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """g (+residual) → (int8 payload, scale, new residual)."""
+    x = g.astype(jnp.float32) + residual
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    new_residual = x - q.astype(jnp.float32) * scale
+    return q, scale, new_residual
+
+
+def decompress(q: jax.Array, scale: jax.Array, dtype=jnp.float32
+               ) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def ef_compress_tree(grads: Any, state: EFState
+                     ) -> tuple[Any, Any, EFState]:
+    """Compress every leaf; returns (payloads, scales, new EF state)."""
+    out = jax.tree.map(compress, grads, state.residual)
+    q = jax.tree.map(lambda o: o[0], out,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree.map(lambda o: o[1], out,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    r = jax.tree.map(lambda o: o[2], out,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    return q, s, EFState(r)
+
+
+def ef_decompress_tree(q: Any, s: Any, dtype=jnp.float32) -> Any:
+    return jax.tree.map(lambda qi, si: decompress(qi, si, dtype), q, s)
+
+
+def dp_allreduce_compressed(grads: Any, state: EFState, axis: str
+                            ) -> tuple[Any, EFState]:
+    """Inside shard_map: int8 all-reduce (psum of dequantized payloads —
+    on the wire int8+scale per hop in a ring; modelled here with the
+    dequantized psum, which is numerically identical for a 2-hop ring)."""
+    q, s, new_state = ef_compress_tree(grads, state)
+    deq = ef_decompress_tree(q, s)
+    summed = jax.tree.map(lambda x: jax.lax.psum(x, axis), deq)
+    n = jax.lax.psum(1, axis)
+    mean = jax.tree.map(lambda x: x / n, summed)
+    return mean, new_state
