@@ -1,0 +1,76 @@
+"""Compiler compile-time benchmark: ``optimize()`` wall-time scaling.
+
+This tracks the performance of the *compiler itself* (not the compiled
+designs) PR-over-PR — the DSE is the whole hot path, and the incremental
+QoR engine (``repro.core.incremental``) exists to keep it O(Δ) per
+proposal.  Methodology:
+
+* Model arms span the node-count axis: smollm-135m (6 nodes) →
+  jamba-v0.1-52b (super-block hybrid, the widest graph) →
+  deepseek-v3-671b (43 nodes, ~4k proposals — the arm the ≥10× target is
+  stated against).  Shape is ``train_4k`` on the SINGLE_POD 16×16 mesh,
+  ``training=True`` — the exact configuration of the paper-table runs.
+* PolyBench arms cover the small-graph regime where fixed overheads
+  (graph construction, connection analysis) dominate.
+* Each arm reports end-to-end ``optimize()`` seconds plus the DSE
+  statistics (nodes, proposals evaluated) so a regression can be
+  attributed to enumeration growth vs. per-proposal cost.
+* Results are also written to ``BENCH_compile_time.json`` (path
+  overridable via ``REPRO_BENCH_OUT_DIR``) so the trajectory is diffable
+  across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.core import SINGLE_POD, build_lm_graph, optimize
+
+from .common import POLYBENCH
+
+MODEL_ARMS = ("smollm-135m", "jamba-v0.1-52b", "deepseek-v3-671b")
+PB_ARMS = ("2mm", "3mm", "atax", "correlation")
+
+
+def _time_optimize(graph_builder, training: bool) -> dict:
+    g = graph_builder()
+    t0 = time.perf_counter()
+    sched, _plan, rep = optimize(g, SINGLE_POD, training=training)
+    dt = time.perf_counter() - t0
+    return {
+        "wall_s": dt,
+        "nodes": len(sched.nodes),
+        "evaluated": rep.parallelize.evaluated,
+        "rejected_constraint": rep.parallelize.rejected_constraint,
+        "total_s": rep.cost.total_s,
+    }
+
+
+def run(report, archs=None, fast: bool = False) -> dict:
+    # --fast skips the slower model-zoo arms (matching the other suites);
+    # the full run keeps deepseek-v3-671b, the arm the 10x target tracks.
+    archs = archs or (MODEL_ARMS[:2] if fast else MODEL_ARMS)
+    results: dict[str, dict] = {}
+    for arch in archs:
+        cfg = get_config(arch)
+        shape = SHAPES["train_4k"]
+        r = _time_optimize(lambda: build_lm_graph(cfg, shape), training=True)
+        results[f"model/{arch}"] = r
+        report.add(f"compile_time/{arch}", us_per_call=r["wall_s"] * 1e6,
+                   derived=f"nodes={r['nodes']}|evaluated={r['evaluated']}")
+    for name in (PB_ARMS[:2] if fast else PB_ARMS):
+        r = _time_optimize(POLYBENCH[name], training=False)
+        results[f"polybench/{name}"] = r
+        report.add(f"compile_time/pb_{name}", us_per_call=r["wall_s"] * 1e6,
+                   derived=f"nodes={r['nodes']}|evaluated={r['evaluated']}")
+
+    out_dir = Path(os.environ.get("REPRO_BENCH_OUT_DIR", "."))
+    out = out_dir / "BENCH_compile_time.json"
+    try:
+        out.write_text(json.dumps(results, indent=2, sort_keys=True))
+    except OSError as e:  # read-only CWD: keep the CSV rows, note the miss
+        report.add("compile_time/json_write_failed", 0.0, derived=str(e))
+    return results

@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV.  Suites:
 * ``ablation_scale``  — Fig. 10 (parallel factor × tile size)
 * ``roofline``        — §Roofline rows from dry-run artifacts (if present)
 * ``train_smoke``     — real measured CPU training throughput (smoke cfg)
+* ``compile_time``    — ``optimize()`` wall time per config (the compiler's
+  own perf trajectory; also emits ``BENCH_compile_time.json``)
 
 ``python -m benchmarks.run [--suite NAME] [--fast]``
 """
@@ -48,7 +50,7 @@ def main() -> None:
     ap.add_argument("--suite", default="all",
                     choices=("all", "case_study", "polybench", "models",
                              "ablation_iaca", "ablation_scale", "roofline",
-                             "train_smoke"))
+                             "train_smoke", "compile_time"))
     ap.add_argument("--fast", action="store_true",
                     help="skip the slower model-zoo arms")
     args = ap.parse_args()
@@ -79,6 +81,9 @@ def main() -> None:
         r(report)
     if want("train_smoke"):
         bench_train_smoke(report)
+    if want("compile_time"):
+        from .bench_compile_time import run as r
+        r(report, fast=args.fast)
     print(f"# {len(report.rows)} benchmark rows", file=sys.stderr)
 
 

@@ -6,6 +6,7 @@ from .estimator import (MULTI_POD, SINGLE_POD, MeshSpec, estimate,
                         roofline_terms)
 from .fusion import fuse_tasks
 from .graph import build_lm_graph
+from .incremental import IncrementalEstimator
 from .ir import (AccessMap, Buffer, Graph, MemoryEffect, Node, Op, Schedule,
                  Stream, TensorValue)
 from .lower import lower_to_structural
@@ -17,7 +18,8 @@ from .plan import ShardingPlan, build_plan, replicated_plan
 __all__ = [
     "AccessMap", "Buffer", "Graph", "MemoryEffect", "Node", "Op",
     "Schedule", "Stream", "TensorValue", "MeshSpec", "SINGLE_POD",
-    "MULTI_POD", "estimate", "roofline_terms", "construct_functional",
+    "MULTI_POD", "estimate", "IncrementalEstimator", "roofline_terms",
+    "construct_functional",
     "fuse_tasks", "lower_to_structural", "eliminate_multi_producers",
     "balance_paths", "parallelize", "ShardingPlan", "build_plan",
     "replicated_plan", "optimize", "OptimizeReport", "build_lm_graph",

@@ -15,14 +15,21 @@ critical node (paper: "the critical task determines the overall achievable
 performance").  The same constants drive EXPERIMENTS.md §Roofline, where
 the estimate is cross-checked against ``compiled.cost_analysis()`` and
 collective bytes parsed from post-SPMD HLO.
+
+``estimate()`` here is the **batch reference**: a single full-schedule
+pass, O(nodes × ops).  The parallelizer's DSE scores thousands of
+single-node proposals and therefore runs on
+:class:`repro.core.incremental.IncrementalEstimator`, which caches the
+unroll-independent structure and re-scores one proposal in O(deg) —
+bit-identical to this module by construction (asserted across every
+config by ``tests/test_incremental.py``).  Changes to the cost model must
+be made in *both* places; the equivalence tests will catch a drift.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from fractions import Fraction
 
-from .ir import Buffer, Node, Schedule, dtype_bytes
+from .ir import Buffer, Node, Schedule
 
 # TPU v5e per-chip constants (assignment-specified).
 PEAK_FLOPS = 197e12          # bf16 FLOP/s
@@ -173,8 +180,7 @@ def _reduction_bytes(node: Node, sched: Schedule) -> float:
         if k <= 1:
             continue
         out_bytes = sum(
-            sched.value_bytes.get(v, 0) / _op_out_shard(v_op := op, v,
-                                                        node.unroll)
+            sched.value_bytes.get(v, 0) / _op_out_shard(op, v, node.unroll)
             for v in op.outs)
         total += 2.0 * out_bytes * (k - 1) / k * op.repeat
     return total
@@ -192,8 +198,7 @@ class EstimateContext:
         self.by_name = {n.name: n for n in sched.nodes}
 
 
-def _reshard_bytes(sched: Schedule, mesh: MeshSpec,
-                   ctx: EstimateContext) -> dict[str, int]:
+def _reshard_bytes(sched: Schedule, ctx: EstimateContext) -> dict[str, int]:
     """Per-consumer-node resharding bytes: when a shared buffer's effective
     sharding differs between producer and consumer, XLA inserts an
     all-to-all / all-gather whose per-device payload is roughly the local
@@ -262,7 +267,7 @@ def estimate(sched: Schedule, mesh: MeshSpec, training: bool = True,
              ctx: EstimateContext | None = None) -> ScheduleCost:
     cost = ScheduleCost()
     ctx = ctx or EstimateContext(sched)
-    reshard = _reshard_bytes(sched, mesh, ctx)
+    reshard = _reshard_bytes(sched, ctx)
     sync = _weight_sync_bytes(sched, mesh, training, ctx)
     hbm = 0.0
     for node in sched.nodes:

@@ -88,31 +88,95 @@ def _ordered(a: Op, b: Op, tasks: list[Op]) -> tuple[Op, Op]:
     return (a, b) if ia <= ib else (b, a)
 
 
+class _RegionIndex:
+    """Memoized connectivity over one dispatch region.
+
+    A task's region is never mutated after creation (``_fuse_pair`` builds
+    a *new* merged task), so produces/consumes/intensity are cached per
+    task object.  The successor graph over the current task list is built
+    once per fusion step and shared by every adjacency / cycle query —
+    previously each ``_creates_cycle`` call rebuilt it from scratch, the
+    O(steps × pairs × n²) term that dominated ``optimize()`` wall time on
+    large graphs."""
+
+    def __init__(self) -> None:
+        self._prods: dict[int, set[str]] = {}
+        self._cons: dict[int, set[str]] = {}
+        self._intensity: dict[int, float] = {}
+        self._pins: list[Op] = []   # keep refs so id() keys stay unique
+        self._tasks: list[Op] = []
+        self._succ: list[set[int]] = []
+        self._pos: dict[int, int] = {}
+
+    def prods(self, t: Op) -> set[str]:
+        s = self._prods.get(id(t))
+        if s is None:
+            s = _produces(t)
+            self._prods[id(t)] = s
+            self._pins.append(t)
+        return s
+
+    def cons(self, t: Op) -> set[str]:
+        s = self._cons.get(id(t))
+        if s is None:
+            s = _consumes(t)
+            self._cons[id(t)] = s
+            self._pins.append(t)
+        return s
+
+    def intensity(self, t: Op) -> float:
+        v = self._intensity.get(id(t))
+        if v is None:
+            v = t.intensity()
+            self._intensity[id(t)] = v
+            self._pins.append(t)
+        return v
+
+    def rebuild(self, tasks: list[Op]) -> None:
+        """Recompute the successor graph for the current task list."""
+        self._tasks = list(tasks)
+        self._pos = {id(t): i for i, t in enumerate(self._tasks)}
+        prods = [self.prods(t) for t in self._tasks]
+        cons = [self.cons(t) for t in self._tasks]
+        n = len(self._tasks)
+        self._succ = [set() for _ in range(n)]
+        for i in range(n):
+            pi = prods[i]
+            for j in range(n):
+                if i != j and pi & cons[j]:
+                    self._succ[i].add(j)
+
+    def adjacent(self, a: Op, b: Op) -> bool:
+        ia, ib = self._pos[id(a)], self._pos[id(b)]
+        return ib in self._succ[ia] or ia in self._succ[ib]
+
+    def creates_cycle(self, a: Op, b: Op) -> bool:
+        """Fusing a and b is illegal when a third task sits on a dataflow
+        path between them (the merged task would both feed and consume it).
+        This matters for decode graphs: qkv → cache-update → attention must
+        not fuse qkv with attention around the cache-update node."""
+        ia, ib = self._pos[id(a)], self._pos[id(b)]
+        succ = self._succ
+        for src, dst in ((ia, ib), (ib, ia)):
+            seen: set[int] = set()
+            stack = [n for n in succ[src] if n != dst]
+            while stack:
+                n = stack.pop()
+                if n in seen:
+                    continue
+                seen.add(n)
+                if dst in succ[n]:
+                    return True
+                stack.extend(m for m in succ[n] if m != dst)
+        return False
+
+
 def _creates_cycle(tasks: list[Op], a: Op, b: Op) -> bool:
-    """Fusing a and b is illegal when a third task sits on a dataflow path
-    between them (the merged task would both feed and consume it).  This
-    matters for decode graphs: qkv → cache-update → attention must not fuse
-    qkv with attention around the cache-update node."""
-    succ: dict[int, set[int]] = {i: set() for i in range(len(tasks))}
-    prods = [_produces(t) for t in tasks]
-    cons = [_consumes(t) for t in tasks]
-    for i in range(len(tasks)):
-        for j in range(len(tasks)):
-            if i != j and prods[i] & cons[j]:
-                succ[i].add(j)
-    ia, ib = tasks.index(a), tasks.index(b)
-    for src, dst in ((ia, ib), (ib, ia)):
-        seen: set[int] = set()
-        stack = [n for n in succ[src] if n != dst]
-        while stack:
-            n = stack.pop()
-            if n in seen:
-                continue
-            seen.add(n)
-            if dst in succ[n]:
-                return True
-            stack.extend(m for m in succ[n] if m != dst)
-    return False
+    """Standalone form of :meth:`_RegionIndex.creates_cycle` (kept for
+    direct callers/tests; the fusion phases use the shared index)."""
+    idx = _RegionIndex()
+    idx.rebuild(tasks)
+    return idx.creates_cycle(a, b)
 
 
 # --------------------------------------------------------------------------
@@ -138,14 +202,15 @@ def _fuse_pair(tasks: list[Op], a: Op, b: Op) -> Op:
 
 
 def _pattern_phase(d: Op, patterns: list[FusionPattern],
-                   stats: FusionStats) -> None:
+                   stats: FusionStats, idx: _RegionIndex) -> None:
     worklist = list(d.region)
+    idx.rebuild(d.region)
     while worklist:
         t = worklist.pop(0)
         if t not in d.region:
             continue
         for u in list(d.region):
-            if u is t or not adjacent(t, u) or _creates_cycle(d.region, t, u):
+            if u is t or not idx.adjacent(t, u) or idx.creates_cycle(t, u):
                 continue
             p, c = _ordered(t, u, d.region)
             if any(pat.matches(p, c) for pat in patterns):
@@ -153,6 +218,7 @@ def _pattern_phase(d: Op, patterns: list[FusionPattern],
                 stats.pattern_fusions += 1
                 stats.log.append(f"pattern: {p.name}+{c.name}->{merged.name}")
                 worklist.append(merged)
+                idx.rebuild(d.region)
                 break
 
 
@@ -164,22 +230,24 @@ def _pattern_phase(d: Op, patterns: list[FusionPattern],
 LIGHT_FRACTION = 0.05
 
 
-def _balance_phase(d: Op, stats: FusionStats,
+def _balance_phase(d: Op, stats: FusionStats, idx: _RegionIndex,
                    max_tasks: int | None = None) -> None:
     while len(d.region) > 1:
-        crit = max(t.intensity() for t in d.region)
+        idx.rebuild(d.region)
+        crit = max(idx.intensity(t) for t in d.region)
         pairs = [(a, b) for i, a in enumerate(d.region)
                  for b in d.region[i + 1:]
-                 if adjacent(a, b) and not _creates_cycle(d.region, a, b)]
+                 if idx.adjacent(a, b) and not idx.creates_cycle(a, b)]
         forced = max_tasks is not None and len(d.region) > max_tasks
         if not forced:
             pairs = [(a, b) for a, b in pairs
-                     if min(a.intensity(), b.intensity())
+                     if min(idx.intensity(a), idx.intensity(b))
                      <= LIGHT_FRACTION * crit]
         if not pairs:
             break
-        a, b = min(pairs, key=lambda p: p[0].intensity() + p[1].intensity())
-        fused_intensity = a.intensity() + b.intensity()
+        a, b = min(pairs,
+                   key=lambda p: idx.intensity(p[0]) + idx.intensity(p[1]))
+        fused_intensity = idx.intensity(a) + idx.intensity(b)
         # Paper line 9: stop when fusing would create a new critical task.
         if fused_intensity > crit and not forced:
             break
@@ -206,9 +274,10 @@ def fuse_tasks(graph: Graph, patterns: list[FusionPattern] | None = None,
     """Paper Algorithm 2 over every dispatch in pre-order."""
     patterns = patterns if patterns is not None else default_patterns()
     stats = FusionStats()
+    idx = _RegionIndex()
     for op in list(graph.walk(pre=True)):
         if op.kind == "dispatch":
-            _pattern_phase(op, patterns, stats)
-            _balance_phase(op, stats, max_tasks)
+            _pattern_phase(op, patterns, stats, idx)
+            _balance_phase(op, stats, idx, max_tasks)
     graph.ops = [simplify_hierarchy(o) for o in graph.ops]
     return stats

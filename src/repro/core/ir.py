@@ -448,11 +448,22 @@ class Schedule:
 
     # -- DAG helpers ---------------------------------------------------------
     def edges(self) -> list[tuple[str, str, str]]:
-        """(src_node, dst_node, buffer) edges via shared buffers."""
+        """(src_node, dst_node, buffer) edges via shared buffers.
+
+        One pass over the nodes builds the per-buffer producer/consumer
+        lists (in node order, matching ``producers_of``/``consumers_of``)
+        instead of rescanning every node per buffer."""
+        prod: dict[str, list[Node]] = {}
+        cons: dict[str, list[Node]] = {}
+        for n in self.nodes:
+            for b in n.writes():
+                prod.setdefault(b, []).append(n)
+            for b in n.reads():
+                cons.setdefault(b, []).append(n)
         out = []
         for buf in self.buffers:
-            for p in self.producers_of(buf):
-                for c in self.consumers_of(buf):
+            for p in prod.get(buf, ()):
+                for c in cons.get(buf, ()):
                     if p.name != c.name:
                         out.append((p.name, c.name, buf))
         return out
@@ -483,8 +494,10 @@ class Schedule:
     def depth_of(self) -> dict[str, int]:
         """Longest-path depth per node (for data-path balancing)."""
         depth = {n.name: 0 for n in self.nodes}
+        succ: dict[str, list[str]] = {n.name: [] for n in self.nodes}
+        for s, d, _ in self.edges():
+            succ[s].append(d)
         for n in self.topo_order():
-            for s, d, _ in self.edges():
-                if s == n.name:
-                    depth[d] = max(depth[d], depth[n.name] + 1)
+            for d in succ[n.name]:
+                depth[d] = max(depth[d], depth[n.name] + 1)
         return depth

@@ -56,7 +56,12 @@ def optimize(graph: Graph, mesh: MeshSpec, *,
         sched, mesh, ia=ia, ca=ca, training=training,
         max_parallel_factor=max_parallel_factor,
         seed_uniform=seed_uniform and ca)
-    report.cost = estimate(sched, mesh, training=training)
+    # The parallelizer's incremental engine already holds the final QoR
+    # (bit-identical to the batch reference — tests/test_incremental.py
+    # asserts so); fall back to ``estimate()`` only if it is absent.
+    report.cost = (report.parallelize.cost
+                   if report.parallelize.cost is not None
+                   else estimate(sched, mesh, training=training))
     plan = build_plan(sched, mesh, fsdp=fsdp, coherent=ca,
                       meta={"graph": graph.name, "ia": ia, "ca": ca})
 

@@ -22,6 +22,30 @@ Steps (paper numbering):
 
 Ablation switches (``ia``, ``ca``) reproduce the paper's IA-only / CA-only
 / naive arms (Fig. 11).
+
+Compile-time engineering (the DSE is the whole ``optimize()`` hot path;
+``benchmarks/bench_compile_time.py`` tracks it PR-over-PR):
+
+* Proposals are scored through :class:`~.incremental.IncrementalEstimator`
+  — re-scoring one node's proposal is O(deg) instead of the batch
+  estimator's O(nodes × ops), with bit-identical totals.
+* ``_proposals()`` enumeration (and each proposal's unroll factors and
+  canonical-preference penalty) is memoized per node — the pf cap is fixed
+  for the whole ``parallelize()`` call, so sweeps 2+ reuse the sweep-1
+  enumeration.
+* Constraint projection only scans the connections *incident* to the node
+  under DSE (hoisted per-node incidence lists) rather than every
+  connection in the schedule.
+* Coordinate-descent sweeps keep a **dirty set**: a node is only re-DSE'd
+  when its DSE inputs may have changed.  Scoring node *n*'s proposals
+  varies the latencies of *n* and its direct consumers only, and reads
+  the committed state of *n*'s neighbours (constraints, neighbour-axes
+  tie-break) and of the *co-producers* feeding a shared consumer (their
+  reshard contribution shifts the consumer's ``max()`` roofline term).
+  So a change to node *x* dirties ``neighbours(x) ∪ co_producers(x)`` —
+  immediately, so later-ordered nodes re-run within the same sweep, as
+  the full sweep would — and a clean node provably re-selects the same
+  proposal (its search is independent of its own current assignment).
 """
 from __future__ import annotations
 
@@ -31,8 +55,8 @@ from dataclasses import dataclass, field
 from fractions import Fraction
 from typing import Optional
 
-from .estimator import (EstimateContext, MeshSpec, estimate,
-                        node_parallel_factor)
+from .estimator import MeshSpec, ScheduleCost
+from .incremental import IncrementalEstimator
 from .ir import Node, Schedule
 
 # Mesh-axis affinity by loop-dim name: which axes a dim may take, in
@@ -108,8 +132,11 @@ def analyze_connections(sched: Schedule) -> list[Connection]:
     return conns
 
 
-def connection_count(sched: Schedule) -> dict[str, int]:
-    conns = analyze_connections(sched)
+def connection_count(sched: Schedule,
+                     conns: list[Connection] | None = None
+                     ) -> dict[str, int]:
+    if conns is None:
+        conns = analyze_connections(sched)
     count: dict[str, int] = {n.name: 0 for n in sched.nodes}
     for c in conns:
         count[c.src] += 1
@@ -217,6 +244,9 @@ class ParallelizeResult:
     rejected_constraint: int = 0
     rejected_budget: int = 0
     log: list[str] = field(default_factory=list)
+    #: final schedule cost from the incremental engine (bit-identical to
+    #: ``estimate(sched, mesh, training)`` on the returned assignment).
+    cost: ScheduleCost | None = None
 
 
 def parallelize(sched: Schedule, mesh: MeshSpec, *,
@@ -228,9 +258,48 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
     res = ParallelizeResult()
     max_pf = max_parallel_factor or mesh.chips
     conns = analyze_connections(sched)
-    counts = connection_count(sched)
+    counts = connection_count(sched, conns)
     res.pf = parallel_factors(sched, max_pf, ia)
-    ctx = EstimateContext(sched)
+    est = IncrementalEstimator(sched, mesh, training=training)
+
+    # Hoisted DSE structure: per-node incident connections (in global conn
+    # order), neighbourhood sets for the dirty-set sweeps, and the memoized
+    # proposal enumeration (the pf cap is fixed per node for this call, so
+    # the enumeration — and each proposal's unroll factors and static
+    # preference penalty — is computed exactly once per node).
+    incident: dict[str, list[Connection]] = {n.name: [] for n in sched.nodes}
+    affected: dict[str, set[str]] = {n.name: set() for n in sched.nodes}
+    producers_of: dict[str, set[str]] = {}
+    for c in conns:
+        incident[c.src].append(c)
+        incident[c.dst].append(c)
+        affected[c.src].add(c.dst)
+        affected[c.dst].add(c.src)
+        producers_of.setdefault(c.dst, set()).add(c.src)
+    # Co-producers of a shared consumer influence each other's DSE ranking
+    # through the consumer's max() roofline term — they must invalidate
+    # each other even though no connection links them directly.
+    for prods in producers_of.values():
+        for p in prods:
+            affected[p] |= prods - {p}
+
+    prop_cache: dict[str, list[tuple[dict[str, tuple[str, ...]],
+                                     dict[str, int], int]]] = {}
+
+    def proposals_for(node: Node):
+        entry = prop_cache.get(node.name)
+        if entry is None:
+            entry = []
+            for proposal in _proposals(node, mesh, res.pf[node.name]):
+                unroll = {
+                    d: math.prod(mesh.size(a) for a in axes)
+                    for d, axes in proposal.items()}
+                pref_pen = sum(
+                    0 if axes and axes[0] == axis_pref(d)[0] else 1
+                    for d, axes in proposal.items())
+                entry.append((proposal, unroll, pref_pen))
+            prop_cache[node.name] = entry
+        return entry
 
     # Step 2: sort by (connections, intensity) descending.
     ordered = sorted(
@@ -244,8 +313,7 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
         constraints: list[dict[str, Fraction]] = []
         neighbor_axes: dict[str, tuple[str, ...]] = {}
         if ca:
-            for c in conns:
-                other = None
+            for c in incident[node.name]:
                 if c.src == node.name and c.dst in done:
                     other = sched.node(c.dst)
                     proj = c.project(other.unroll, from_src=False)
@@ -266,16 +334,14 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
 
         prev = dict(node.axis_map)
         best = None
+        best_unroll: dict[str, int] = {}
         best_key = None
-        for proposal in _proposals(node, mesh, res.pf[node.name]):
+        for proposal, unroll, pref_penalty in proposals_for(node):
             res.evaluated += 1
             valid = True
             for constr in constraints:
                 for d, cval in constr.items():
-                    uf = 1
-                    for a in proposal.get(d, ()):
-                        uf *= mesh.size(a)
-                    if not _divisible(cval, uf):
+                    if not _divisible(cval, unroll.get(d, 1)):
                         valid = False
                         break
                 if not valid:
@@ -283,48 +349,48 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
             if not valid:
                 res.rejected_constraint += 1
                 continue
-            _apply(node, proposal, mesh)
-            cost = estimate(sched, mesh, training=training, ctx=ctx)
-            # Canonical-preference tie-break: count axis assignments that
-            # are not the dim's first preference (prefers data→batch,
-            # model→heads/d_ff/experts when the roofline terms tie).
-            pref_penalty = sum(
-                0 if axes and axes[0] == axis_pref(d)[0] else 1
-                for d, axes in proposal.items())
+            est.propose(node.name, proposal, unroll)
             neigh_penalty = sum(
                 1 for d, axes in neighbor_axes.items()
                 if proposal.get(d, ()) != axes)
             if ca:
-                key = (cost.total_s, cost.hbm_bytes_per_device,
+                key = (est.total_s, est.hbm_bytes_per_device,
                        neigh_penalty, pref_penalty)
             else:
                 # CA off: ignore the coupling cost, exactly the failure
                 # mode Fig. 11 demonstrates.
-                key = (cost.nodes[node.name].compute_s,
-                       -node_parallel_factor(node))
+                key = (est.node_compute_s(node.name),
+                       -est.node_parallel_factor(node.name))
+            est.rollback()
             if best_key is None or key < best_key:
-                best_key, best = key, proposal
+                best_key, best, best_unroll = key, proposal, unroll
         if best is None:
-            best = {}
-        _apply(node, best, mesh)
+            best, best_unroll = {}, {}
+        est.apply(node.name, best, best_unroll)
         return dict(node.axis_map) != prev
 
     # Sweep 1: the paper's greedy order (most-connected first).  Further
     # sweeps re-run each node's DSE with *all* neighbours parallelized —
     # coordinate descent that converges the chain onto one layout basin
     # (greedy one-pass can lock attention into SP while the FFN picks TP,
-    # paying a reshard at every boundary).
+    # paying a reshard at every boundary).  The dirty set short-circuits
+    # sweeps 3+: only nodes with a changed neighbour can select differently.
     done: set[str] = set()
     for node in ordered:
         dse_node(node, done)
         done.add(node.name)
+    dirty = {n.name for n in ordered}
     for sweep in range(3):
-        changed = 0
+        changed_names: list[str] = []
         for node in ordered:
+            if node.name not in dirty:
+                continue
+            dirty.discard(node.name)
             if dse_node(node, done):
-                changed += 1
-        res.log.append(f"sweep{sweep + 2}: {changed} nodes changed")
-        if not changed:
+                changed_names.append(node.name)
+                dirty |= affected[node.name]
+        res.log.append(f"sweep{sweep + 2}: {len(changed_names)} nodes changed")
+        if not changed_names:
             break
 
     if seed_uniform:
@@ -334,14 +400,16 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
         # move is needed).  Evaluate a small family of *uniform* axis→dim
         # assignments applied to every node at once; adopt the best if it
         # beats the per-node result, then refine with two more sweeps.
+        # All bulk mutations are routed through the incremental engine, so
+        # each candidate costs O(edges), not a batch re-estimate.
         def snapshot():
             return {n.name: (dict(n.unroll), dict(n.axis_map))
                     for n in sched.nodes}
 
         def restore(state):
             for n in sched.nodes:
-                n.unroll, n.axis_map = (dict(state[n.name][0]),
-                                        dict(state[n.name][1]))
+                unroll, axis_map = state[n.name]
+                est.apply(n.name, dict(axis_map), dict(unroll))
 
         def apply_uniform(assign: dict[str, tuple[str, ...]]):
             for n in sched.nodes:
@@ -359,11 +427,10 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
                             continue
                         total *= f
                     prop[d] = axes
-                _apply(n, prop, mesh)
+                est.apply(n.name, prop)
 
         best_state = snapshot()
-        best_cost = estimate(sched, mesh, training=training,
-                             ctx=ctx).total_s
+        best_cost = est.total_s
         all_dims = sorted({d for n in sched.nodes
                            for d in _shardable_dims(n)})
         cands = []
@@ -378,7 +445,7 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
                     cands.append(a)
         for a in cands:
             apply_uniform(a)
-            cost = estimate(sched, mesh, training=training, ctx=ctx).total_s
+            cost = est.total_s
             if cost < best_cost:
                 best_cost, best_state = cost, snapshot()
                 res.log.append(f"uniform-seed: {a} -> {cost*1e3:.2f}ms")
@@ -386,7 +453,7 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
         for sweep in range(2):
             if not any(dse_node(n, done) for n in ordered):
                 break
-        final = estimate(sched, mesh, training=training, ctx=ctx).total_s
+        final = est.total_s
         if final > best_cost:
             restore(best_state)
 
@@ -394,4 +461,5 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
         res.log.append(
             f"{node.name}: pf={res.pf[node.name]} "
             f"factors={node.unroll} axes={node.axis_map}")
+    res.cost = est.schedule_cost()
     return res

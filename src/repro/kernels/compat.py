@@ -1,0 +1,16 @@
+"""Version-compat shims for the Pallas TPU API surface.
+
+JAX renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (the
+``TPU`` prefix was redundant inside ``pallas.tpu``); depending on the
+installed JAX exactly one of the two exists.  Every kernel imports
+``CompilerParams`` from here so the five Pallas kernels stay agnostic to
+which side of the rename the container is on.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import CompilerParams
+
 NEG = -1e30
 
 
@@ -104,7 +106,7 @@ def mlstm_chunk(q, k, v, i_pre, f_pre, *, chunk: int = 128,
             pltpu.VMEM((Dh,), jnp.float32),
             pltpu.VMEM((1, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, i_pre, f_pre)

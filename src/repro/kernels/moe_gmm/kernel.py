@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import CompilerParams
+
 
 def _gmm_kernel(gs_ref, x_ref, w_ref, y_ref, acc_ref, *, c_block: int):
     d_i = pl.program_id(3)
@@ -70,7 +72,7 @@ def moe_gmm(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
                                lambda e, c, f, d: (e, c, f)),
         out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
         scratch_shapes=[pltpu.VMEM((c_block, f_block), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -13,6 +13,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import CompilerParams
+
 
 def _rms_kernel(x_ref, s_ref, o_ref, *, eps: float):
     x = x_ref[...].astype(jnp.float32)
@@ -35,7 +37,7 @@ def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
                   pl.BlockSpec((D,), lambda i: (0,))],
         out_specs=pl.BlockSpec((row_block, D), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, D), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, scale)

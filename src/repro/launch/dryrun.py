@@ -33,7 +33,7 @@ from ..core import MULTI_POD, SINGLE_POD, build_lm_graph, optimize
 from ..core.graph import model_flops_6nd, step_flops
 from ..core.plan import replicated_plan
 from .hlo_analysis import collective_bytes, hlo_op_histogram
-from .mesh import make_production_mesh, mesh_spec
+from .mesh import make_production_mesh, mesh_spec, set_mesh
 from .steps import build_prefill_step, build_serve_step, build_train_step
 
 ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
@@ -79,7 +79,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
     chips = mesh.devices.size
     t0 = time.perf_counter()
     try:
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             if shape.mode == "train":
                 step = build_train_step(cfg, shape, mesh, plan,
                                         remat=remat,

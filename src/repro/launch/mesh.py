@@ -12,6 +12,16 @@ import jax
 from ..core.estimator import MULTI_POD, SINGLE_POD, MeshSpec
 
 
+def set_mesh(mesh):
+    """Version-compat mesh context: ``jax.set_mesh`` where it exists
+    (sharding-in-types JAX), otherwise the legacy global-mesh context
+    manager (``with mesh:``), which is what scopes
+    ``with_sharding_constraint(PartitionSpec)`` on older JAX."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

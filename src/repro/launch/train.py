@@ -30,7 +30,7 @@ from ..data import ShardedLoader, SyntheticCorpus
 from ..distributed import CheckpointManager, StragglerMonitor
 from ..models.lm import LM
 from ..optim import AdamW, cosine_schedule
-from .mesh import make_host_mesh
+from .mesh import make_host_mesh, set_mesh
 
 
 def build(args):
@@ -95,7 +95,7 @@ def main(argv=None) -> dict:
         print(f"[train] resumed from step {latest}")
 
     losses = []
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         for step in range(start, args.steps):
             if step == args.simulate_preemption_at and not restored:
                 print(f"[train] simulated preemption at step {step}")

@@ -1,0 +1,210 @@
+"""Incremental QoR engine: exact equivalence with the batch estimator, and
+DSE determinism of the rewritten parallelizer.
+
+The contract under test (see ``repro.core.incremental``):
+
+* ``IncrementalEstimator`` is **bit-identical** to the batch
+  ``estimate()`` — not approximately equal — on every model config and
+  PolyBench graph, for any state reachable through propose / commit /
+  rollback (the integer terms are delta-maintained exactly; every float
+  reduction re-runs in batch order).
+* ``parallelize()`` on top of it chooses the same plans the pre-refactor
+  batch-scored DSE chose (golden snapshots captured from the old code).
+"""
+from __future__ import annotations
+
+import random
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import POLYBENCH
+from repro.configs import SHAPES, get_config, list_archs
+from repro.core import (SINGLE_POD, build_lm_graph, construct_functional,
+                        estimate, fuse_tasks, lower_to_structural, optimize)
+from repro.core.balance import balance_paths
+from repro.core.incremental import IncrementalEstimator
+from repro.core.multi_producer import eliminate_multi_producers
+from repro.core.parallelize import _proposals, parallelize
+
+
+def _cost_tuple(cost):
+    return (
+        cost.total_s, cost.critical_s, cost.reshard_bytes, cost.sync_bytes,
+        cost.hbm_bytes_per_device,
+        [(name, c.compute_s, c.memory_s, c.collective_s)
+         for name, c in cost.nodes.items()],
+    )
+
+
+def _assert_exact(est: IncrementalEstimator, sched, mesh, training):
+    batch = estimate(sched, mesh, training=training)
+    inc = est.schedule_cost()
+    assert _cost_tuple(inc) == _cost_tuple(batch)
+    assert est.total_s == batch.total_s
+    assert est.critical_s == batch.critical_s
+    assert est.hbm_bytes_per_device == batch.hbm_bytes_per_device
+
+
+def _lowered(graph):
+    construct_functional(graph)
+    fuse_tasks(graph)
+    sched = lower_to_structural(graph)
+    eliminate_multi_producers(sched)
+    balance_paths(sched)
+    return sched
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_incremental_matches_batch_on_optimized_model(arch):
+    """After a full optimize() the engine's final cost is bit-identical to
+    a fresh batch estimate of the chosen assignment."""
+    g = build_lm_graph(get_config(arch), SHAPES["train_4k"])
+    sched, _plan, rep = optimize(g, SINGLE_POD)
+    batch = estimate(sched, SINGLE_POD, training=True)
+    assert _cost_tuple(rep.cost) == _cost_tuple(batch)
+    est = IncrementalEstimator(sched, SINGLE_POD, training=True)
+    _assert_exact(est, sched, SINGLE_POD, training=True)
+
+
+@pytest.mark.parametrize("name", sorted(POLYBENCH))
+def test_incremental_matches_batch_on_polybench(name):
+    g = POLYBENCH[name]()
+    sched, _plan, rep = optimize(g, SINGLE_POD, training=False)
+    batch = estimate(sched, SINGLE_POD, training=False)
+    assert _cost_tuple(rep.cost) == _cost_tuple(batch)
+    est = IncrementalEstimator(sched, SINGLE_POD, training=False)
+    _assert_exact(est, sched, SINGLE_POD, training=False)
+
+
+@pytest.mark.parametrize("arch,training", [
+    ("smollm-135m", True), ("stablelm-3b", True),
+    ("deepseek-v2-236b", True), ("jamba-v0.1-52b", False),
+])
+def test_propose_commit_rollback_sequences(arch, training):
+    """Drive the engine through a long randomized propose/commit/rollback
+    walk; the cached state must stay bit-identical to a batch re-estimate
+    at every step, and rollback must restore the pre-proposal totals."""
+    g = build_lm_graph(get_config(arch), SHAPES["train_4k"])
+    sched = _lowered(g)
+    est = IncrementalEstimator(sched, SINGLE_POD, training=training)
+    _assert_exact(est, sched, SINGLE_POD, training)
+
+    rng = random.Random(1234)
+    per_node = {n.name: _proposals(n, SINGLE_POD, SINGLE_POD.chips)
+                for n in sched.nodes}
+    names = [n.name for n in sched.nodes if per_node[n.name]]
+    for step in range(60):
+        name = rng.choice(names)
+        proposal = rng.choice(per_node[name])
+        before = est.total_s
+        est.propose(name, proposal)
+        if rng.random() < 0.5:
+            est.rollback()
+            assert est.total_s == before
+        else:
+            est.commit()
+        if step % 10 == 0:
+            _assert_exact(est, sched, SINGLE_POD, training)
+    _assert_exact(est, sched, SINGLE_POD, training)
+
+
+def test_double_propose_rejected():
+    g = POLYBENCH["2mm"]()
+    sched = _lowered(g)
+    est = IncrementalEstimator(sched, SINGLE_POD, training=False)
+    node = sched.nodes[0]
+    prop = _proposals(node, SINGLE_POD, SINGLE_POD.chips)[0]
+    est.propose(node.name, prop)
+    with pytest.raises(RuntimeError):
+        est.propose(node.name, prop)
+    est.rollback()
+    with pytest.raises(RuntimeError):
+        est.rollback()
+
+
+def test_refresh_resyncs_after_external_mutation():
+    """Mutating node state behind the engine's back then refresh()ing must
+    land in the same state as building a fresh engine."""
+    g = POLYBENCH["3mm"]()
+    sched = _lowered(g)
+    est = IncrementalEstimator(sched, SINGLE_POD, training=False)
+    for n in sched.nodes:
+        props = _proposals(n, SINGLE_POD, SINGLE_POD.chips)
+        if props:
+            n.axis_map = dict(props[-1])
+            n.unroll = {d: 16 * len(a) for d, a in props[-1].items()}
+    est.refresh()
+    _assert_exact(est, sched, SINGLE_POD, training=False)
+
+
+# -- DSE determinism: golden plans captured from the pre-refactor code ------
+#
+# Each entry: run key -> {node index: (sorted unroll items,
+# sorted (dim, axes) items)}; nodes with an empty assignment are omitted.
+# Captured from the batch-scored parallelizer immediately before the
+# incremental rewrite (same configs, SINGLE_POD, train_4k).
+
+_B, _S = ("batch", 16), ("seq", 16)
+_BD, _SM = ("batch", ("data",)), ("seq", ("model",))
+_GOLDEN = {
+    ("smollm-135m", True, True): {
+        i: ([_B, _S], [_BD, _SM]) for i in range(6)},
+    ("smollm-135m", True, False): {
+        i: ([_B, _S], [_BD, _SM]) for i in range(6)},
+    ("smollm-135m", False, True): {
+        i: ([_B, _S], [_BD, _SM]) for i in range(6)},
+    ("stablelm-3b", True, True): {
+        0: ([_B, _S], [_BD, _SM]),
+        1: ([_B, ("kv_heads", 16)], [_BD, ("kv_heads", ("model",))]),
+        2: ([_B, _S], [_BD, _SM]),
+        3: ([_B, ("d_model", 16)], [_BD, ("d_model", ("model",))]),
+        4: ([_B, ("d_ff", 16)], [_BD, ("d_ff", ("model",))]),
+        5: ([_B, ("d_model", 16)], [_BD, ("d_model", ("model",))]),
+        6: ([_B, ("vocab", 16)], [_BD, ("vocab", ("model",))]),
+    },
+}
+
+_GOLDEN_PB = {
+    "2mm": {0: ([("i", 16), ("j", 16)],
+                [("i", ("data",)), ("j", ("model",))]),
+            1: ([("i", 16), ("l", 16)],
+                [("i", ("data",)), ("l", ("model",))])},
+    "correlation": {1: ([("l", 256)], [("l", ("data", "model"))])},
+}
+
+
+def _plan_snapshot(sched):
+    out = {}
+    for i, n in enumerate(sched.nodes):
+        if n.unroll or n.axis_map:
+            out[i] = (sorted(n.unroll.items()),
+                      sorted((d, tuple(a)) for d, a in n.axis_map.items()))
+    return out
+
+
+@pytest.mark.parametrize("arch,ia,ca", sorted(_GOLDEN))
+def test_parallelize_golden_plans_models(arch, ia, ca):
+    g = build_lm_graph(get_config(arch), SHAPES["train_4k"])
+    sched, _plan, _rep = optimize(g, SINGLE_POD, ia=ia, ca=ca)
+    assert _plan_snapshot(sched) == _GOLDEN[(arch, ia, ca)]
+
+
+@pytest.mark.parametrize("name", sorted(_GOLDEN_PB))
+def test_parallelize_golden_plans_polybench(name):
+    g = POLYBENCH[name]()
+    sched, _plan, _rep = optimize(g, SINGLE_POD, training=False)
+    assert _plan_snapshot(sched) == _GOLDEN_PB[name]
+
+
+def test_parallelize_direct_matches_optimize_cost():
+    """parallelize()'s incremental final cost equals a batch estimate when
+    called standalone (not through optimize)."""
+    g = build_lm_graph(get_config("smollm-360m"), SHAPES["train_4k"])
+    sched = _lowered(g)
+    res = parallelize(sched, SINGLE_POD, training=True, seed_uniform=True)
+    batch = estimate(sched, SINGLE_POD, training=True)
+    assert _cost_tuple(res.cost) == _cost_tuple(batch)

@@ -35,6 +35,7 @@ def test_dryrun_reduced_mesh_compiles():
         from repro.core import MeshSpec, build_lm_graph, optimize
         from repro.launch.steps import build_train_step
         from repro.launch.hlo_analysis import collective_bytes
+        from repro.launch.mesh import set_mesh
 
         cfg = get_config("smollm-135m")
         shape = ShapeSpec("t", 512, 16, "train")
@@ -42,7 +43,7 @@ def test_dryrun_reduced_mesh_compiles():
         g = build_lm_graph(cfg, shape)
         sched, plan, rep = optimize(g, mspec, training=True)
         mesh = jax.make_mesh((4, 2), ("data", "model"))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             step = build_train_step(cfg, shape, mesh, plan)
             compiled = step.fn.lower(*step.abstract_inputs).compile()
         stats = collective_bytes(compiled.as_text())
@@ -84,6 +85,7 @@ def test_ep_moe_matches_global():
     out = _run(4, """
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import get_config
+        from repro.launch.mesh import set_mesh
         from repro.models.moe import moe_ffn, moe_ffn_ep
         from repro.models.layers import ParamBuilder
         from repro.models.moe import init_moe
@@ -100,7 +102,7 @@ def test_ep_moe_matches_global():
                               jnp.float32).astype(jnp.bfloat16)
         mesh = jax.make_mesh((2, 2), ("data", "model"))
         ref, aux_ref = moe_ffn(x, p, cfg, lambda t, d, s=None: t)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             got, aux = jax.jit(lambda x, p: moe_ffn_ep(
                 x, p, cfg, ("data",), ("model",), (), mesh))(x, p)
         np.testing.assert_allclose(
