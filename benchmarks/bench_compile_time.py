@@ -18,11 +18,29 @@ proposal.  Methodology:
 * Results are also written to ``BENCH_compile_time.json`` (path
   overridable via ``REPRO_BENCH_OUT_DIR``) so the trajectory is diffable
   across PRs.
+
+Regression gate (CI)::
+
+    PYTHONPATH=src python -m benchmarks.bench_compile_time \
+        --compare BENCH_compile_time.json [--threshold 2.0] [--fast]
+
+re-runs the suite and exits nonzero when any arm's ``optimize()``
+wall-time exceeds ``threshold ×`` the committed baseline (arms faster
+than ``--min-delta-s`` absolute growth are ignored — the PolyBench arms
+run in single-digit milliseconds and would otherwise gate on scheduler
+noise).  QoR (``total_s``) drift is reported alongside and fails the
+gate when the estimated schedule got *worse* — compile-time wins must
+not be bought with QoR.  In compare mode the fresh results go to a
+scratch dir (unless ``REPRO_BENCH_OUT_DIR`` is set) so a failing run
+cannot overwrite the committed baseline it is being judged against.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import sys
+import tempfile
 import time
 from pathlib import Path
 
@@ -74,3 +92,92 @@ def run(report, archs=None, fast: bool = False) -> dict:
     except OSError as e:  # read-only CWD: keep the CSV rows, note the miss
         report.add("compile_time/json_write_failed", 0.0, derived=str(e))
     return results
+
+
+def compare(results: dict, baseline: dict, threshold: float,
+            min_delta_s: float, qor_tolerance: float = 1e-3,
+            allow_missing: bool = False) -> list[str]:
+    """Diff a fresh run against a committed baseline.  Returns the list
+    of failure strings (empty = gate passes).  Baseline arms that were
+    not re-run fail the gate unless ``allow_missing`` — otherwise a
+    ``--fast`` invocation would silently exempt the slowest arms (the
+    very ones the gate exists for)."""
+    failures: list[str] = []
+    for arm in sorted(set(results) & set(baseline)):
+        new, old = results[arm], baseline[arm]
+        ratio = new["wall_s"] / old["wall_s"] if old["wall_s"] else float("inf")
+        print(f"{arm}: wall {old['wall_s']:.3f}s -> {new['wall_s']:.3f}s "
+              f"({ratio:.2f}x), qor {old['total_s']*1e3:.3f}ms -> "
+              f"{new['total_s']*1e3:.3f}ms")
+        if (ratio > threshold
+                and new["wall_s"] - old["wall_s"] > min_delta_s):
+            failures.append(
+                f"{arm}: optimize() wall-time {new['wall_s']:.3f}s is "
+                f"{ratio:.2f}x the baseline {old['wall_s']:.3f}s "
+                f"(threshold {threshold:.2f}x)")
+        if new["total_s"] > old["total_s"] * (1 + qor_tolerance):
+            failures.append(
+                f"{arm}: QoR regressed — estimated total_s "
+                f"{new['total_s']*1e3:.3f}ms vs baseline "
+                f"{old['total_s']*1e3:.3f}ms")
+    missing = sorted(set(baseline) - set(results))
+    if missing:
+        if allow_missing:
+            print(f"note: baseline arms not re-run: {missing}")
+        else:
+            failures.append(
+                f"baseline arms not re-run: {missing} (drop --fast, or "
+                f"pass --allow-missing-arms to gate on a subset)")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="optimize() compile-time benchmark / regression gate")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the slower model-zoo arms")
+    ap.add_argument("--compare", metavar="BASELINE_JSON", default=None,
+                    help="diff against a committed BENCH_compile_time.json "
+                         "and exit nonzero on regression")
+    ap.add_argument("--threshold", type=float, default=2.0,
+                    help="max allowed wall-time ratio vs baseline")
+    ap.add_argument("--min-delta-s", type=float, default=0.25,
+                    help="ignore wall-time growth below this many seconds "
+                         "(absolute), so millisecond arms don't gate on "
+                         "scheduler noise")
+    ap.add_argument("--allow-missing-arms", action="store_true",
+                    help="gate on the arms actually re-run even if the "
+                         "baseline has more (e.g. with --fast); by "
+                         "default missing baseline arms fail the gate")
+    args = ap.parse_args(argv)
+
+    # In compare mode the baseline must survive the run: run() writes its
+    # results to BENCH_compile_time.json, usually the very file being
+    # compared against — a failing gate would overwrite the baseline with
+    # the regressed numbers and silently pass on the next invocation.
+    # Redirect the write to a scratch dir (unless the caller already
+    # redirected it) and read the baseline up front.
+    baseline = None
+    if args.compare is not None:
+        baseline = json.loads(Path(args.compare).read_text())
+        if "REPRO_BENCH_OUT_DIR" not in os.environ:
+            os.environ["REPRO_BENCH_OUT_DIR"] = tempfile.mkdtemp(
+                prefix="repro_bench_")
+
+    from .run import Report
+    report = Report()
+    print("name,us_per_call,derived")
+    results = run(report, fast=args.fast)
+    if baseline is None:
+        return 0
+    failures = compare(results, baseline, args.threshold, args.min_delta_s,
+                       allow_missing=args.allow_missing_arms)
+    for f in failures:
+        print(f"FAIL: {f}", file=sys.stderr)
+    if not failures:
+        print("compile-time gate: OK", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,7 +10,10 @@ Prints ``name,us_per_call,derived`` CSV.  Suites:
 * ``roofline``        — §Roofline rows from dry-run artifacts (if present)
 * ``train_smoke``     — real measured CPU training throughput (smoke cfg)
 * ``compile_time``    — ``optimize()`` wall time per config (the compiler's
-  own perf trajectory; also emits ``BENCH_compile_time.json``)
+  own perf trajectory; also emits ``BENCH_compile_time.json``).  Run as
+  ``python -m benchmarks.bench_compile_time --compare
+  BENCH_compile_time.json`` to use it as a CI gate that exits nonzero on
+  a >2× wall-time (or any QoR) regression against the committed baseline.
 
 ``python -m benchmarks.run [--suite NAME] [--fast]``
 """

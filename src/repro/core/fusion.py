@@ -271,7 +271,25 @@ def simplify_hierarchy(op: Op) -> Op:
 
 def fuse_tasks(graph: Graph, patterns: list[FusionPattern] | None = None,
                max_tasks: int | None = None) -> FusionStats:
-    """Paper Algorithm 2 over every dispatch in pre-order."""
+    """Paper Algorithm 2 over every dispatch in pre-order (in place).
+
+    Fewer, better-balanced tasks is what keeps the downstream DSE
+    tractable: the parallelizer's proposal enumeration and the beam
+    search's joint-move neighbourhoods both scale with the node count of
+    the lowered schedule, so fusion here is the first half of the
+    "hierarchy makes the DSE scale" claim.
+
+    Args:
+        graph: Functional graph whose dispatch regions get fused.
+        patterns: profitable producer→consumer patterns (defaults to
+            :func:`default_patterns`).
+        max_tasks: when set, the balance phase keeps fusing (ignoring the
+            light-task guard) until each dispatch has at most this many
+            tasks — the escape valve for pathologically wide frontends.
+
+    Returns:
+        :class:`FusionStats` with per-phase fusion counts and a log.
+    """
     patterns = patterns if patterns is not None else default_patterns()
     stats = FusionStats()
     idx = _RegionIndex()

@@ -29,6 +29,20 @@ path uses: the engine is **bit-identical** to ``estimate()``, not merely
 approximately equal (per-edge and per-sync terms are integers, so their
 delta maintenance is exact; float terms are never delta-maintained).
 
+Three access patterns sit on top of the cached state:
+
+* :meth:`~IncrementalEstimator.propose` / ``commit`` / ``rollback`` —
+  the transactional single-node mutation path (at most one outstanding).
+* :meth:`~IncrementalEstimator.score` — a **read-only** evaluation of a
+  single-node proposal: same arithmetic (and bit-identical results) as
+  propose → read → rollback, but with no mutation and no undo log.  Being
+  pure, concurrent ``score()`` calls are safe, which is what the
+  parallelizer's graph-colored sweeps rely on.
+* :meth:`~IncrementalEstimator.snapshot` / ``restore`` — whole-schedule
+  assignment states for the beam search; ``restore`` re-applies only the
+  nodes that differ, so switching between sibling beam states costs
+  O(diff × deg), not O(schedule).
+
 Equivalence is enforced by ``tests/test_incremental.py`` across every
 model config and the PolyBench graphs, including after arbitrary
 propose/rollback sequences.
@@ -36,6 +50,7 @@ propose/rollback sequences.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
 from .estimator import (FIXED_NODE_OVERHEAD_S, HBM_BW, ICI_BW, PEAK_FLOPS,
                         MeshSpec, NodeCost, ScheduleCost)
@@ -43,6 +58,23 @@ from .ir import Node, Schedule
 
 #: sentinel for "no access map" (shard factor 1) in output-shard descriptors
 _NO_ACCESS = None
+
+#: one whole-schedule assignment: node name -> (axis_map, unroll)
+Snapshot = dict[str, tuple[dict[str, tuple[str, ...]], dict[str, int]]]
+
+
+class ProposalScore(NamedTuple):
+    """Read-only QoR of a single-node proposal (see
+    :meth:`IncrementalEstimator.score`).  ``total_s`` and ``hbm_bytes``
+    are bit-identical to what ``propose()`` + the ``total_s`` /
+    ``hbm_bytes_per_device`` properties would report; ``node_compute_s``
+    and ``node_parallel_factor`` are the per-node terms the CA-off
+    ablation ranks by."""
+
+    total_s: float
+    hbm_bytes: int
+    node_compute_s: float
+    node_parallel_factor: int
 
 
 def _shard_factor(pairs: tuple[tuple[str, int], ...],
@@ -104,7 +136,14 @@ class IncrementalEstimator:
     through :meth:`propose` / :meth:`commit` / :meth:`rollback` (or the
     one-shot :meth:`apply`), which write ``node.unroll`` / ``node.axis_map``
     on the underlying :class:`Node` objects and incrementally refresh the
-    cached cost terms.  At most one proposal may be outstanding.
+    cached cost terms.  At most one proposal may be outstanding, and a
+    rollback restores every cached term bit-identically (asserted by
+    ``tests/test_beam.py``).
+
+    The DSE scan path uses :meth:`score` instead — the same O(deg)
+    arithmetic with zero mutation — and the beam search moves between
+    whole-schedule states with :meth:`snapshot` / :meth:`restore`.
+    External bulk mutation of node state requires a :meth:`refresh`.
     """
 
     def __init__(self, sched: Schedule, mesh: MeshSpec,
@@ -215,24 +254,25 @@ class IncrementalEstimator:
 
     # -- per-node term recomputation ----------------------------------------
 
-    def _node_local(self, i: int) -> None:
-        """Recompute the unroll/axis-dependent local terms of node ``i``
-        (same arithmetic, in the same order, as the batch estimator)."""
-        node = self._nodes[i]
+    def _local_terms(self, i: int, unroll: dict[str, int],
+                     axis_map: dict[str, tuple[str, ...]]
+                     ) -> tuple[float, float, float, float, int]:
+        """Pure form of the unroll/axis-dependent local terms of node ``i``
+        (same arithmetic, in the same order, as the batch estimator):
+        returns ``(compute_s, memory_s, hbm_bytes, reduction_bytes,
+        sync_bytes)`` without touching the caches."""
         st = self._static[i]
-        unroll = node.unroll
         pf = 1
         for v in unroll.values():
             pf *= v
         pf = max(pf, 1)
-        self._comp[i] = st.flops / pf / PEAK_FLOPS
+        comp = st.flops / pf / PEAK_FLOPS
 
         total = 0.0
         for buf_bytes, pairs in st.mem_terms:
             total += buf_bytes / _shard_factor(pairs, unroll)
         nbytes = total * st.repeat
-        self._nbytes[i] = nbytes
-        self._mem[i] = nbytes / HBM_BW
+        mem = nbytes / HBM_BW
 
         red = 0.0
         for red_dims, outs, op_repeat in st.red_ops:
@@ -244,10 +284,8 @@ class IncrementalEstimator:
             out_bytes = sum(vbytes / _out_shard(dims, unroll)
                             for vbytes, dims in outs)
             red += 2.0 * out_bytes * (k - 1) / k * op_repeat
-        self._red[i] = red
 
         sync = 0
-        axis_map = node.axis_map
         for buf_bytes, pairs, w_dims in st.sync_terms:
             shard = buf_bytes // max(_shard_factor(pairs, unroll), 1)
             w_axes = {a for d in w_dims for a in axis_map.get(d, ())}
@@ -258,21 +296,36 @@ class IncrementalEstimator:
             if sync_ways > 1:
                 sync += int(2 * shard * (sync_ways - 1) / sync_ways
                             * st.repeat)
-        self._sync[i] = sync
+        return comp, mem, nbytes, red, sync
 
-    def _edge_contrib(self, edge: _EdgeStatic) -> int:
+    def _node_local(self, i: int) -> None:
+        """Recompute the cached local terms of node ``i`` from its current
+        ``unroll`` / ``axis_map``."""
+        node = self._nodes[i]
+        (self._comp[i], self._mem[i], self._nbytes[i], self._red[i],
+         self._sync[i]) = self._local_terms(i, node.unroll, node.axis_map)
+
+    def _edge_contrib(self, edge: _EdgeStatic, ov_i: int = -1,
+                      ov_axis_map: dict[str, tuple[str, ...]] | None = None,
+                      ov_unroll: dict[str, int] | None = None) -> int:
+        """Reshard bytes of one edge.  When ``ov_i`` matches an endpoint,
+        that endpoint's state is read from the ``ov_*`` overrides instead
+        of the node object (the read-only :meth:`score` path)."""
         p = self._nodes[edge.src]
         c = self._nodes[edge.dst]
+        p_axis_map = ov_axis_map if edge.src == ov_i else p.axis_map
+        c_axis_map = ov_axis_map if edge.dst == ov_i else c.axis_map
         mismatch = False
         for pdim, cdim in edge.axes:
-            paxes = tuple(p.axis_map.get(pdim, ())) if pdim else ()
-            caxes = tuple(c.axis_map.get(cdim, ())) if cdim else ()
+            paxes = tuple(p_axis_map.get(pdim, ())) if pdim else ()
+            caxes = tuple(c_axis_map.get(cdim, ())) if cdim else ()
             if paxes != caxes:
                 mismatch = True
         if not mismatch:
             return 0
+        p_unroll = ov_unroll if edge.src == ov_i else p.unroll
         return edge.buf_bytes // max(
-            _shard_factor(edge.src_pairs, p.unroll), 1)
+            _shard_factor(edge.src_pairs, p_unroll), 1)
 
     def _latency(self, i: int) -> float:
         coll = (self._reshard[i] + self._sync[i] + self._red[i]) / ICI_BW
@@ -370,6 +423,78 @@ class IncrementalEstimator:
         self.propose(name, axis_map, unroll)
         self.commit()
 
+    # -- read-only scoring ---------------------------------------------------
+
+    def score(self, name: str, axis_map: dict[str, tuple[str, ...]],
+              unroll: dict[str, int] | None = None) -> ProposalScore:
+        """Evaluate a single-node proposal **without mutating anything**.
+
+        Bit-identical to ``propose(name, ...)`` followed by reading
+        ``total_s`` / ``hbm_bytes_per_device`` and rolling back — the same
+        term functions run in the same order — but the caches, the node
+        objects and the undo log are untouched, so:
+
+        * it is legal while a proposal is outstanding, and
+        * concurrent ``score()`` calls from several threads are safe
+          (pure reads of the shared cached state), which is what the
+          parallelizer's graph-colored sweeps exploit.
+        """
+        i = self._idx[name]
+        if unroll is None:
+            unroll = {
+                d: _axes_product(self.mesh, axes)
+                for d, axes in axis_map.items()}
+        comp, mem, nbytes, red, sync = self._local_terms(i, unroll, axis_map)
+
+        # Incident-edge reshard deltas, accumulated per destination node.
+        resh_ov: dict[int, int] = {}
+        for e in self._edges_of[i]:
+            edge = self._edges[e]
+            new = self._edge_contrib(edge, i, axis_map, unroll)
+            if new != self._contrib[e]:
+                dst = edge.dst
+                resh_ov[dst] = (resh_ov.get(dst, self._reshard[dst])
+                                + new - self._contrib[e])
+
+        # Latencies of the touched nodes, everything else from the cache.
+        lat_ov: dict[int, float] = {}
+        for j in {i} | set(resh_ov):
+            if j == i:
+                c, m, r, s = comp, mem, red, sync
+            else:
+                c, m, r, s = (self._comp[j], self._mem[j], self._red[j],
+                              self._sync[j])
+            coll = (resh_ov.get(j, self._reshard[j]) + s + r) / ICI_BW
+            lat_ov[j] = max(c, m, coll) + FIXED_NODE_OVERHEAD_S
+
+        total = sum(lat_ov.get(j, v) for j, v in enumerate(self._lat))
+        hbm = 0.0
+        for j, v in enumerate(self._nbytes):
+            hbm += nbytes if j == i else v
+        pf = 1
+        for v in unroll.values():
+            pf *= v
+        return ProposalScore(total, int(hbm), comp, max(pf, 1))
+
+    # -- whole-schedule states (beam search) ---------------------------------
+
+    def snapshot(self) -> Snapshot:
+        """Copy the current whole-schedule assignment (a beam state)."""
+        return {n.name: (dict(n.axis_map), dict(n.unroll))
+                for n in self._nodes}
+
+    def restore(self, snap: Snapshot) -> int:
+        """Re-apply ``snap``, touching only the nodes whose assignment
+        differs from the current one (O(diff × deg)).  Returns the number
+        of nodes changed."""
+        changed = 0
+        for n in self._nodes:
+            axis_map, unroll = snap[n.name]
+            if n.axis_map != axis_map or n.unroll != unroll:
+                self.apply(n.name, dict(axis_map), dict(unroll))
+                changed += 1
+        return changed
+
     # -- queries -------------------------------------------------------------
 
     @property
@@ -396,6 +521,20 @@ class IncrementalEstimator:
         for v in node.unroll.values():
             f *= v
         return max(f, 1)
+
+    def node_latency_s(self, name: str) -> float:
+        """Cached roofline latency of one node under the current state."""
+        return self._lat[self._idx[name]]
+
+    def mismatched_nodes(self) -> set[str]:
+        """Names of the endpoints of every edge currently paying a reshard
+        — the natural origins for the beam search's joint moves."""
+        out: set[str] = set()
+        for e, edge in enumerate(self._edges):
+            if self._contrib[e]:
+                out.add(self._nodes[edge.src].name)
+                out.add(self._nodes[edge.dst].name)
+        return out
 
     def schedule_cost(self) -> ScheduleCost:
         """Materialize the full :class:`ScheduleCost` (bit-identical to

@@ -41,8 +41,38 @@ def optimize(graph: Graph, mesh: MeshSpec, *,
              ia: bool = True, ca: bool = True, fuse: bool = True,
              max_parallel_factor: int | None = None,
              fsdp: bool = False, training: bool = True,
-             seed_uniform: bool = True
+             beam_width: int = 8, joint_radius: int = 1,
+             sweep_workers: int | None = None,
+             seed_uniform: bool | None = None
              ) -> tuple[Schedule, ShardingPlan, OptimizeReport]:
+    """Run the five-step HIDA-OPT pipeline and derive the sharding plan.
+
+    Args:
+        graph: Functional dataflow graph (mutated in place by the passes).
+        mesh: target mesh axes, e.g. ``SINGLE_POD`` (16×16).
+        ia / ca / fuse: paper Fig. 11 ablation switches (intensity-aware
+            budgets, connection-aware scoring, task fusion).
+        max_parallel_factor: global parallel-factor budget (defaults to
+            the chip count).
+        fsdp: emit FSDP-style weight sharding in the plan.
+        training: include weight-gradient sync traffic in the QoR model.
+        beam_width: width of the parallelizer's beam search over joint
+            multi-node proposals; ``<= 1`` falls back to pure greedy
+            coordinate descent (see :func:`repro.core.parallelize`).
+        joint_radius: affected-set hops re-optimized around each joint
+            move's origin.
+        sweep_workers: thread-pool width for graph-colored sweep scoring
+            (does not change the plan; ``None``/1 = serial).  Only useful
+            on free-threaded Python — under the GIL it slows compiles
+            slightly; leave ``None`` otherwise.
+        seed_uniform: **deprecated, ignored** when the beam is enabled —
+            the beam seeds itself with the uniform-assignment family.
+
+    Returns:
+        ``(schedule, plan, report)``: the parallelized Structural
+        schedule, the derived :class:`~repro.core.plan.ShardingPlan`, and
+        the pass-by-pass :class:`OptimizeReport`.
+    """
     t0 = time.perf_counter()
     report = OptimizeReport()
 
@@ -55,7 +85,12 @@ def optimize(graph: Graph, mesh: MeshSpec, *,
     report.parallelize = parallelize(
         sched, mesh, ia=ia, ca=ca, training=training,
         max_parallel_factor=max_parallel_factor,
-        seed_uniform=seed_uniform and ca)
+        beam_width=beam_width, joint_radius=joint_radius,
+        sweep_workers=sweep_workers,
+        # Joint uniform moves are a CA concept: keep the legacy escape
+        # hatch suppressed in the CA-off ablation arm, as before.
+        seed_uniform=(seed_uniform if ca or seed_uniform is None
+                      else False))
     # The parallelizer's incremental engine already holds the final QoR
     # (bit-identical to the batch reference — tests/test_incremental.py
     # asserts so); fall back to ``estimate()`` only if it is absent.

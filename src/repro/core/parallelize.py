@@ -23,16 +23,40 @@ Steps (paper numbering):
 Ablation switches (``ia``, ``ca``) reproduce the paper's IA-only / CA-only
 / naive arms (Fig. 11).
 
-Compile-time engineering (the DSE is the whole ``optimize()`` hot path;
-``benchmarks/bench_compile_time.py`` tracks it PR-over-PR):
+Beyond the paper's greedy step 4, the DSE is a **beam search over joint
+multi-node proposals** (``beam_width``, ``joint_radius``):
 
-* Proposals are scored through :class:`~.incremental.IncrementalEstimator`
-  — re-scoring one node's proposal is O(deg) instead of the batch
-  estimator's O(nodes × ops), with bit-identical totals.
+* A *beam state* is one whole-schedule assignment, held as an
+  ``IncrementalEstimator`` snapshot; switching between sibling states
+  re-applies only the differing nodes.
+* The beam is seeded with the converged greedy state plus the family of
+  *uniform* axis→dim assignments (one coordinated layout applied to every
+  node at once) — the joint moves that rescue schedules locked into an
+  all-unsharded basin, where every single-node move pays two reshard
+  boundaries that exceed its own gain.  This subsumes the former
+  ``seed_uniform`` escape hatch.
+* Each round expands the best states through *joint moves*: pick an
+  origin node (reshard-paying endpoints first, then by roofline latency),
+  take its top runner-up proposals from the memoized enumeration, apply
+  one, then greedily re-DSE every node within ``joint_radius`` hops of
+  the origin in the affected-set graph.  The resulting whole-schedule
+  states compete for the ``beam_width`` slots on total QoR.
+* The winner gets full coordinate-descent refinement sweeps, and the
+  greedy result is kept when nothing beats it — beam QoR is ≥ greedy QoR
+  on every schedule *by construction* (``tests/test_beam.py``).
+
+Compile-time engineering (the DSE is the whole ``optimize()`` hot path;
+``benchmarks/bench_compile_time.py`` tracks it PR-over-PR, and its
+``--compare`` mode fails on >2× regressions):
+
+* Proposals are scored through the **read-only**
+  :meth:`~.incremental.IncrementalEstimator.score` — O(deg) per proposal
+  with bit-identical totals to the batch estimator, and no undo-log
+  traffic on the scan path.
 * ``_proposals()`` enumeration (and each proposal's unroll factors and
   canonical-preference penalty) is memoized per node — the pf cap is fixed
-  for the whole ``parallelize()`` call, so sweeps 2+ reuse the sweep-1
-  enumeration.
+  for the whole ``parallelize()`` call, so every later scan reuses the
+  sweep-1 enumeration.
 * Constraint projection only scans the connections *incident* to the node
   under DSE (hoisted per-node incidence lists) rather than every
   connection in the schedule.
@@ -42,21 +66,35 @@ Compile-time engineering (the DSE is the whole ``optimize()`` hot path;
   the committed state of *n*'s neighbours (constraints, neighbour-axes
   tie-break) and of the *co-producers* feeding a shared consumer (their
   reshard contribution shifts the consumer's ``max()`` roofline term).
-  So a change to node *x* dirties ``neighbours(x) ∪ co_producers(x)`` —
-  immediately, so later-ordered nodes re-run within the same sweep, as
-  the full sweep would — and a clean node provably re-selects the same
-  proposal (its search is independent of its own current assignment).
+  So a change to node *x* dirties ``neighbours(x) ∪ co_producers(x)``,
+  and a clean node provably re-selects the same proposal (its search is
+  independent of its own current assignment).
+* Sweeps are **graph-colored**: the frontier is level-scheduled over the
+  affected-set graph so that every node's earlier-ordered conflicting
+  neighbours land in earlier levels.  Nodes within one level have
+  non-overlapping DSE neighbourhoods, are scored against the same frozen
+  committed state (via the pure ``score()`` path — thread-safe, so
+  ``sweep_workers`` can fan a level out over a thread pool), and commit
+  together.  In exact arithmetic this chooses the same plan as the serial
+  in-order sweep: a same-level commit only shifts a later node's
+  re-summed totals by a constant, which cannot reorder its proposals.
+  The float re-summation makes that a near- rather than bit-level
+  guarantee (a sub-ulp tie could in principle round differently across
+  the shift); ``tests/test_beam.py`` asserts plan equality empirically on
+  every config.
 """
 from __future__ import annotations
 
 import itertools
 import math
+import warnings
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from fractions import Fraction
 from typing import Optional
 
 from .estimator import MeshSpec, ScheduleCost
-from .incremental import IncrementalEstimator
+from .incremental import IncrementalEstimator, Snapshot
 from .ir import Node, Schedule
 
 # Mesh-axis affinity by loop-dim name: which axes a dim may take, in
@@ -247,14 +285,78 @@ class ParallelizeResult:
     #: final schedule cost from the incremental engine (bit-identical to
     #: ``estimate(sched, mesh, training)`` on the returned assignment).
     cost: ScheduleCost | None = None
+    #: ``total_s`` of the converged greedy coordinate descent, before the
+    #: beam phase — the invariant ``cost.total_s <= greedy_total_s`` holds
+    #: by construction whenever the beam ran.
+    greedy_total_s: float = 0.0
+    #: whole-schedule states examined by the beam (seeds + joint-move
+    #: successors, before dedup/truncation to the beam width).
+    beam_states: int = 0
+    #: joint (origin + neighbourhood re-DSE) moves expanded.
+    joint_moves: int = 0
 
 
 def parallelize(sched: Schedule, mesh: MeshSpec, *,
                 max_parallel_factor: int | None = None,
                 ia: bool = True, ca: bool = True,
                 training: bool = True,
-                seed_uniform: bool = False) -> ParallelizeResult:
-    """Paper Section 6.5 steps 1-4 over a Structural schedule (in place)."""
+                beam_width: int = 8,
+                joint_radius: int = 1,
+                beam_rounds: int = 3,
+                sweep_workers: int | None = None,
+                colored_sweeps: bool = True,
+                seed_uniform: bool | None = None) -> ParallelizeResult:
+    """Paper Section 6.5 steps 1-4 over a Structural schedule (in place).
+
+    Steps 1-3 follow the paper; step 4 runs the paper's greedy
+    most-connected-first pass, converges it by coordinate descent, then —
+    when connection-aware scoring is on — improves it with a beam search
+    over joint multi-node proposals (see the module docstring for the
+    full design).
+
+    Args:
+        sched: Structural schedule; node ``unroll`` / ``axis_map`` are
+            assigned in place.
+        mesh: target mesh (axis names and sizes).
+        max_parallel_factor: global parallel-factor budget (defaults to
+            the chip count).
+        ia: intensity-aware parallel-factor capping (paper Fig. 11 arm).
+        ca: connection-aware scoring and constraint projection (paper
+            Fig. 11 arm).  The beam phase requires ``ca``; with it off,
+            the result is the paper's greedy per-node DSE.
+        training: include weight-gradient sync traffic in the QoR.
+        beam_width: number of whole-schedule states kept per beam round.
+            ``<= 1`` disables the beam phase entirely (pure greedy
+            coordinate descent, the pre-beam behaviour).
+        joint_radius: how many hops of the affected-set graph are greedily
+            re-optimized around a joint move's origin node.  Radius 1
+            covers the producer/consumer pairs whose coordinated unroll
+            choices single-node moves cannot reach.
+        beam_rounds: maximum joint-move expansion rounds (the beam stops
+            early as soon as a round fails to improve the best state).
+        sweep_workers: when > 1, each graph-color level of a refinement
+            sweep is scored on a thread pool (the scoring path is
+            read-only and thread-safe).  Does not change the chosen plan.
+            Under the CPython GIL the pure-Python scoring cannot actually
+            run concurrently, so this is a small net *slowdown* today —
+            it exists for free-threaded builds; leave ``None`` otherwise.
+        colored_sweeps: level-schedule sweep frontiers over the
+            affected-set graph and score each level as a batch (the
+            default).  ``False`` forces strictly serial in-order sweeps —
+            the reference semantics, same plan in exact arithmetic (see
+            the module docstring for the float-tie caveat;
+            ``tests/test_beam.py`` asserts equality on every config).
+        seed_uniform: **deprecated, ignored** — the beam's seeding with
+            the uniform-assignment family subsumes it (kept so existing
+            call sites don't break; pass ``beam_width=0`` *and*
+            ``seed_uniform=True`` to run the legacy escape hatch).
+    """
+    if seed_uniform is not None:
+        warnings.warn(
+            "parallelize(seed_uniform=...) is deprecated: the beam search "
+            "seeds itself with the uniform-assignment family "
+            "(beam_width/joint_radius control it); see "
+            "docs/ARCHITECTURE.md.", DeprecationWarning, stacklevel=2)
     res = ParallelizeResult()
     max_pf = max_parallel_factor or mesh.chips
     conns = analyze_connections(sched)
@@ -306,10 +408,15 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
         sched.nodes,
         key=lambda n: (counts.get(n.name, 0), n.intensity()), reverse=True)
     res.order = [n.name for n in ordered]
+    all_names = {n.name for n in sched.nodes}
 
-    def dse_node(node: Node, done: set[str]) -> bool:
-        """One constrained DSE for ``node`` (Alg. 4).  Returns True when
-        the assignment changed."""
+    def rank_node(node: Node, done: set[str], k: int
+                  ) -> tuple[list[tuple[tuple, dict, dict]], int, int]:
+        """Constrained DSE scan for ``node`` against the *committed*
+        estimator state: returns the ``k`` best ``(key, proposal,
+        unroll)`` plus (evaluated, rejected) counts.  Pure — scoring goes
+        through the read-only ``est.score()``, so concurrent calls for
+        nodes with non-overlapping neighbourhoods are safe."""
         constraints: list[dict[str, Fraction]] = []
         neighbor_axes: dict[str, tuple[str, ...]] = {}
         if ca:
@@ -332,12 +439,10 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
                         neighbor_axes.setdefault(
                             mine, other.axis_map[theirs])
 
-        prev = dict(node.axis_map)
-        best = None
-        best_unroll: dict[str, int] = {}
-        best_key = None
+        evaluated = rejected = 0
+        scored: list[tuple[tuple, dict, dict]] = []
         for proposal, unroll, pref_penalty in proposals_for(node):
-            res.evaluated += 1
+            evaluated += 1
             valid = True
             for constr in constraints:
                 for d, cval in constr.items():
@@ -347,74 +452,127 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
                 if not valid:
                     break
             if not valid:
-                res.rejected_constraint += 1
+                rejected += 1
                 continue
-            est.propose(node.name, proposal, unroll)
-            neigh_penalty = sum(
-                1 for d, axes in neighbor_axes.items()
-                if proposal.get(d, ()) != axes)
+            s = est.score(node.name, proposal, unroll)
             if ca:
-                key = (est.total_s, est.hbm_bytes_per_device,
-                       neigh_penalty, pref_penalty)
+                neigh_penalty = sum(
+                    1 for d, axes in neighbor_axes.items()
+                    if proposal.get(d, ()) != axes)
+                key = (s.total_s, s.hbm_bytes, neigh_penalty, pref_penalty)
             else:
                 # CA off: ignore the coupling cost, exactly the failure
                 # mode Fig. 11 demonstrates.
-                key = (est.node_compute_s(node.name),
-                       -est.node_parallel_factor(node.name))
-            est.rollback()
-            if best_key is None or key < best_key:
-                best_key, best, best_unroll = key, proposal, unroll
-        if best is None:
-            best, best_unroll = {}, {}
+                key = (s.node_compute_s, -s.node_parallel_factor)
+            scored.append((key, proposal, unroll))
+        # Stable sort: among equal keys the earliest-enumerated proposal
+        # wins, matching the strict `<` selection of a linear scan.
+        scored.sort(key=lambda t: t[0])
+        return scored[:k], evaluated, rejected
+
+    def dse_node(node: Node, done: set[str]) -> bool:
+        """One constrained DSE for ``node`` (Alg. 4).  Returns True when
+        the assignment changed."""
+        top, evaluated, rejected = rank_node(node, done, 1)
+        res.evaluated += evaluated
+        res.rejected_constraint += rejected
+        best, best_unroll = (top[0][1], top[0][2]) if top else ({}, {})
+        prev = dict(node.axis_map)
         est.apply(node.name, best, best_unroll)
         return dict(node.axis_map) != prev
 
-    # Sweep 1: the paper's greedy order (most-connected first).  Further
-    # sweeps re-run each node's DSE with *all* neighbours parallelized —
-    # coordinate descent that converges the chain onto one layout basin
-    # (greedy one-pass can lock attention into SP while the FFN picks TP,
-    # paying a reshard at every boundary).  The dirty set short-circuits
-    # sweeps 3+: only nodes with a changed neighbour can select differently.
-    done: set[str] = set()
-    for node in ordered:
-        dse_node(node, done)
-        done.add(node.name)
-    dirty = {n.name for n in ordered}
-    for sweep in range(3):
-        changed_names: list[str] = []
+    pool = (ThreadPoolExecutor(max_workers=sweep_workers)
+            if colored_sweeps and sweep_workers and sweep_workers > 1
+            else None)
+
+    def sweep(frontier: list[Node]) -> tuple[list[str], int]:
+        """One coordinate-descent sweep over ``frontier`` (in DSE order),
+        graph-colored: the frontier is level-scheduled over the
+        affected-set graph (every node lands one level after its last
+        earlier-ordered conflicting neighbour), each level is scored
+        against the frozen committed state — concurrently when a pool is
+        configured — and committed as a batch.  Within a level no node is
+        in another's affected set, so the selections are independent of
+        commit order and the resulting plan matches the serial in-order
+        sweep (exact in real arithmetic; see the module docstring for the
+        float-tie caveat; asserted on every config by
+        ``tests/test_beam.py``).
+
+        Returns ``(changed node names, color count)`` — color count 0 for
+        the serial reference mode."""
+        if not colored_sweeps:
+            return [node.name for node in frontier
+                    if dse_node(node, all_names)], 0
+        level: dict[str, int] = {}
+        for node in frontier:
+            lv = 0
+            for m in affected[node.name]:
+                if m in level:
+                    lv = max(lv, level[m] + 1)
+            level[node.name] = lv
+        classes: list[list[Node]] = [
+            [] for _ in range(1 + max(level.values(), default=0))]
+        for node in frontier:
+            classes[level[node.name]].append(node)
+
+        changed: list[str] = []
+        for cls in classes:
+            if pool is not None and len(cls) > 1:
+                picks = list(pool.map(
+                    lambda n: rank_node(n, all_names, 1), cls))
+            else:
+                picks = [rank_node(n, all_names, 1) for n in cls]
+            for node, (top, evaluated, rejected) in zip(cls, picks):
+                res.evaluated += evaluated
+                res.rejected_constraint += rejected
+                best, best_unroll = (top[0][1], top[0][2]) if top else ({}, {})
+                prev = dict(node.axis_map)
+                est.apply(node.name, best, best_unroll)
+                if dict(node.axis_map) != prev:
+                    changed.append(node.name)
+        return changed, len(classes)
+
+    def converge(dirty: set[str], max_sweeps: int, tag: str) -> None:
+        """Full-order coordinate descent to a fixpoint: every sweep covers
+        the *whole* current frontier (no first-change short-circuit) and
+        re-dirties the affected sets of whatever changed."""
+        for s in range(max_sweeps):
+            frontier = [n for n in ordered if n.name in dirty]
+            if not frontier:
+                break
+            changed, ncolors = sweep(frontier)
+            res.log.append(
+                f"{tag} sweep{s + 1}: {len(changed)}/{len(frontier)} "
+                f"nodes changed "
+                f"({f'{ncolors} colors' if ncolors else 'serial'})")
+            if not changed:
+                break
+            dirty = set()
+            for name in changed:
+                dirty |= affected[name]
+
+    try:
+        # ---- greedy phase: the paper's most-connected-first pass, then
+        # coordinate descent (sweeps re-run each node's DSE with *all*
+        # neighbours parallelized, converging the chain onto one layout basin
+        # — greedy one-pass can lock attention into SP while the FFN picks TP,
+        # paying a reshard at every boundary).
+        done: set[str] = set()
         for node in ordered:
-            if node.name not in dirty:
-                continue
-            dirty.discard(node.name)
-            if dse_node(node, done):
-                changed_names.append(node.name)
-                dirty |= affected[node.name]
-        res.log.append(f"sweep{sweep + 2}: {len(changed_names)} nodes changed")
-        if not changed_names:
-            break
+            dse_node(node, done)
+            done.add(node.name)
+        converge(set(all_names), max_sweeps=4, tag="greedy")
+        greedy_snap = est.snapshot()
+        greedy_key = (est.total_s, est.hbm_bytes_per_device)
+        res.greedy_total_s = greedy_key[0]
 
-    if seed_uniform:
-        # Beyond-paper escape hatch for coordination lock-in: per-node
-        # moves cannot leave an all-unsharded basin when each single move
-        # pays two reshard boundaries that exceed its own gain (a joint
-        # move is needed).  Evaluate a small family of *uniform* axis→dim
-        # assignments applied to every node at once; adopt the best if it
-        # beats the per-node result, then refine with two more sweeps.
-        # All bulk mutations are routed through the incremental engine, so
-        # each candidate costs O(edges), not a batch re-estimate.
-        def snapshot():
-            return {n.name: (dict(n.unroll), dict(n.axis_map))
-                    for n in sched.nodes}
-
-        def restore(state):
-            for n in sched.nodes:
-                unroll, axis_map = state[n.name]
-                est.apply(n.name, dict(axis_map), dict(unroll))
-
-        def apply_uniform(assign: dict[str, tuple[str, ...]]):
+        def apply_uniform(assign: dict[str, tuple[str, ...]]) -> None:
+            """One joint move of radius ∞: the same axis→dim layout applied to
+            every node at once (routed through the incremental engine, so each
+            candidate costs O(edges), not a batch re-estimate)."""
             for n in sched.nodes:
                 dims = _shardable_dims(n)
-                prop = {}
+                prop: dict[str, tuple[str, ...]] = {}
                 total = 1
                 for d, axes in assign.items():
                     if d not in dims:
@@ -429,34 +587,134 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
                     prop[d] = axes
                 est.apply(n.name, prop)
 
-        best_state = snapshot()
-        best_cost = est.total_s
-        all_dims = sorted({d for n in sched.nodes
-                           for d in _shardable_dims(n)})
-        cands = []
-        for d1 in all_dims + [None]:
-            for d2 in all_dims + [None]:
-                a: dict[str, tuple[str, ...]] = {}
-                if d1 and "data" in axis_pref(d1):
-                    a[d1] = ("data",)
-                if d2 and "model" in axis_pref(d2):
-                    a[d2] = (a.get(d2, ()) + ("model",))
-                if a:
-                    cands.append(a)
-        for a in cands:
-            apply_uniform(a)
-            cost = est.total_s
-            if cost < best_cost:
-                best_cost, best_state = cost, snapshot()
-                res.log.append(f"uniform-seed: {a} -> {cost*1e3:.2f}ms")
-        restore(best_state)
-        for sweep in range(2):
-            if not any(dse_node(n, done) for n in ordered):
-                break
-        final = est.total_s
-        if final > best_cost:
-            restore(best_state)
+        def uniform_candidates() -> list[dict[str, tuple[str, ...]]]:
+            all_dims = sorted({d for n in sched.nodes
+                               for d in _shardable_dims(n)})
+            cands = []
+            for d1 in all_dims + [None]:
+                for d2 in all_dims + [None]:
+                    a: dict[str, tuple[str, ...]] = {}
+                    if d1 and "data" in axis_pref(d1):
+                        a[d1] = ("data",)
+                    if d2 and "model" in axis_pref(d2):
+                        a[d2] = (a.get(d2, ()) + ("model",))
+                    if a:
+                        cands.append(a)
+            return cands
 
+        def neighborhood(origin: str, radius: int) -> list[str]:
+            """Nodes within ``radius`` hops of ``origin`` in the affected-set
+            graph (origin excluded), in DSE order."""
+            seen = {origin}
+            frontier = {origin}
+            for _ in range(radius):
+                frontier = {m for x in frontier for m in affected[x]} - seen
+                seen |= frontier
+            seen.discard(origin)
+            return [n.name for n in ordered if n.name in seen]
+
+        # ---- beam phase: joint multi-node proposals.
+        if ca and beam_width > 1:
+            def sig(snap: Snapshot):
+                return tuple(sorted(
+                    (nm, tuple(sorted((d, axes) for d, axes in am.items())))
+                    for nm, (am, _ur) in snap.items()))
+
+            states: dict[tuple, tuple[tuple, Snapshot]] = {}
+
+            def add_state(snap: Snapshot, key: tuple) -> None:
+                s = sig(snap)
+                if s not in states or key < states[s][0]:
+                    states[s] = (key, snap)
+
+            add_state(greedy_snap, greedy_key)
+            for a in uniform_candidates():
+                apply_uniform(a)
+                key = (est.total_s, est.hbm_bytes_per_device)
+                add_state(est.snapshot(), key)
+            beam = sorted(states.values(), key=lambda t: t[0])[:beam_width]
+            best_key = beam[0][0]
+            res.log.append(
+                f"beam init: {len(states)} states, best {best_key[0]*1e3:.3f}ms"
+                f" (greedy {greedy_key[0]*1e3:.3f}ms)")
+
+            expand_states = max(1, beam_width // 2)
+            max_origins = 4
+            joint_runners = 2
+            for rnd in range(beam_rounds):
+                successors: dict[tuple, tuple[tuple, Snapshot]] = {
+                    sig(snap): (key, snap) for key, snap in beam}
+                for key, snap in beam[:expand_states]:
+                    est.restore(snap)
+                    mm = est.mismatched_nodes()
+                    origins = sorted(
+                        (n for n in ordered if proposals_for(n)),
+                        key=lambda n: (n.name not in mm,
+                                       -est.node_latency_s(n.name)))
+                    for node in origins[:max_origins]:
+                        ranked, evaluated, rejected = rank_node(
+                            node, all_names, joint_runners + 1)
+                        res.evaluated += evaluated
+                        res.rejected_constraint += rejected
+                        tried = 0
+                        for _pkey, prop, unroll in ranked:
+                            if prop == node.axis_map:
+                                continue
+                            if tried >= joint_runners:
+                                break
+                            tried += 1
+                            res.joint_moves += 1
+                            est.apply(node.name, prop, unroll)
+                            for m in neighborhood(node.name, joint_radius):
+                                dse_node(sched.node(m), all_names)
+                            skey = (est.total_s, est.hbm_bytes_per_device)
+                            succ = est.snapshot()
+                            s = sig(succ)
+                            if s not in successors or skey < successors[s][0]:
+                                successors[s] = (skey, succ)
+                            est.restore(snap)
+                beam = sorted(successors.values(), key=lambda t: t[0])[:beam_width]
+                res.log.append(
+                    f"beam round {rnd + 1}: {len(successors)} states, best "
+                    f"{beam[0][0][0]*1e3:.3f}ms")
+                if not beam[0][0] < best_key:
+                    break
+                best_key = beam[0][0]
+            res.beam_states = len(states) + res.joint_moves
+
+            # Refine the winner with full sweeps; keep whichever of
+            # {refined, pre-refinement best, greedy} scores best — beam QoR
+            # can therefore never fall below greedy QoR.
+            est.restore(beam[0][1])
+            converge(set(all_names), max_sweeps=4, tag="beam-refine")
+            final_key = (est.total_s, est.hbm_bytes_per_device)
+            if beam[0][0] < final_key:
+                est.restore(beam[0][1])
+                final_key = beam[0][0]
+            if greedy_key < final_key:
+                est.restore(greedy_snap)
+        elif seed_uniform:
+            # Legacy pre-beam escape hatch (deprecated): best uniform
+            # assignment, then two refinement sweeps over the full node order
+            # (an earlier version short-circuited at the first changed node).
+            best_state = est.snapshot()
+            best_cost = est.total_s
+            for a in uniform_candidates():
+                apply_uniform(a)
+                cost = est.total_s
+                if cost < best_cost:
+                    best_cost, best_state = cost, est.snapshot()
+                    res.log.append(f"uniform-seed: {a} -> {cost*1e3:.2f}ms")
+            est.restore(best_state)
+            for _ in range(2):
+                if not any([dse_node(n, all_names) for n in ordered]):
+                    break
+            if est.total_s > best_cost:
+                est.restore(best_state)
+
+    finally:
+        if pool is not None:
+            pool.shutdown()
     for node in ordered:
         res.log.append(
             f"{node.name}: pf={res.pf[node.name]} "

@@ -168,15 +168,30 @@ def replicated_plan(mesh_spec: MeshSpec, data_axes: Axes = ("pod", "data"),
 def build_plan(sched: Schedule, mesh_spec: MeshSpec,
                fsdp: bool = False, meta: dict | None = None,
                coherent: bool = True) -> ShardingPlan:
-    """Derive the plan from a parallelized schedule.
+    """Derive the :class:`ShardingPlan` from a parallelized schedule.
 
-    ``coherent=True`` (the CA-on product) projects one intensity-weighted
-    consensus rule per logical dim onto every buffer site — constraint
-    sites never disagree, so GSPMD resharding stays incremental.
-    ``coherent=False`` keeps raw per-node layouts (the CA-off ablation
-    arm); measured on deepseek-v3 train_4k this triggers GSPMD
-    "involuntary full rematerialization" and ~2.3 TiB/device of temp —
-    the TPU incarnation of the paper's Fig. 11 'flawed designs'."""
+    Runs after the DSE (greedy + beam search, see
+    :func:`repro.core.parallelize.parallelize`) has written ``unroll`` /
+    ``axis_map`` onto every node: per-buffer specs come from the owning
+    nodes' axis maps projected through their access maps; per-logical-dim
+    ``rules`` are the intensity-weighted majority vote across nodes.
+
+    Args:
+        sched: parallelized Structural schedule (read-only here).
+        mesh_spec: target mesh (recorded in the plan for ``specs()``).
+        fsdp: ZeRO-3-style extra weight sharding over unused data axes
+            (beyond-paper; needed to fit the 100B+ configs in HBM).
+        meta: free-form provenance recorded in the plan (JSON-serialised
+            with it).
+        coherent: ``True`` (the CA-on product) projects one
+            intensity-weighted consensus rule per logical dim onto every
+            buffer site — constraint sites never disagree, so GSPMD
+            resharding stays incremental.  ``False`` keeps raw per-node
+            layouts (the CA-off ablation arm); measured on deepseek-v3
+            train_4k this triggers GSPMD "involuntary full
+            rematerialization" and ~2.3 TiB/device of temp — the TPU
+            incarnation of the paper's Fig. 11 'flawed designs'.
+    """
     plan = ShardingPlan(mesh_spec=mesh_spec, fsdp=fsdp, meta=meta or {})
 
     votes: dict[str, Counter] = {}

@@ -1,0 +1,170 @@
+"""Beam-search DSE invariants (see ``repro.core.parallelize``).
+
+The contracts under test:
+
+* **Beam ≥ greedy, everywhere** — on every registered model config and
+  every PolyBench graph, the beam search's final QoR is at least as good
+  as the converged greedy coordinate descent it is seeded with.  This is
+  structural (the greedy state is always in the beam and is restored when
+  nothing beats it), so the assertion is exact, not approximate.
+* **Beam subsumes the deprecated ``seed_uniform`` escape hatch** — the
+  beam's uniform-family seeding plus refinement must match or beat the
+  legacy path on the schedules it was added for (coordination lock-in).
+* **propose/rollback is a true transaction** — after a rollback every
+  piece of the estimator's internal cached state is bit-identical to what
+  it was before the propose, not just the aggregate totals.
+* **Graph-colored sweeps are plan-identical to serial sweeps** — the
+  level-scheduled batch evaluation (serial or thread-pooled) commits the
+  same plan as strictly in-order coordinate descent.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import warnings
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import POLYBENCH
+from repro.configs import SHAPES, get_config, list_archs
+from repro.core import (SINGLE_POD, build_lm_graph, construct_functional,
+                        fuse_tasks, lower_to_structural, optimize)
+from repro.core.balance import balance_paths
+from repro.core.incremental import IncrementalEstimator
+from repro.core.multi_producer import eliminate_multi_producers
+from repro.core.parallelize import _proposals, parallelize
+
+
+def _lowered_model(arch):
+    g = build_lm_graph(get_config(arch), SHAPES["train_4k"])
+    construct_functional(g)
+    fuse_tasks(g)
+    sched = lower_to_structural(g)
+    eliminate_multi_producers(sched)
+    balance_paths(sched)
+    return sched
+
+
+def _lowered_pb(name):
+    g = POLYBENCH[name]()
+    construct_functional(g)
+    fuse_tasks(g)
+    sched = lower_to_structural(g)
+    eliminate_multi_producers(sched)
+    balance_paths(sched)
+    return sched
+
+
+def _plan_snapshot(sched):
+    return {i: (sorted(n.unroll.items()),
+                sorted((d, tuple(a)) for d, a in n.axis_map.items()))
+            for i, n in enumerate(sched.nodes) if n.unroll or n.axis_map}
+
+
+# -- beam QoR >= greedy QoR on every registered config ----------------------
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_beam_qor_at_least_greedy_models(arch):
+    g = build_lm_graph(get_config(arch), SHAPES["train_4k"])
+    _sched, _plan, rep = optimize(g, SINGLE_POD)
+    res = rep.parallelize
+    assert res.greedy_total_s > 0
+    assert rep.cost.total_s <= res.greedy_total_s
+
+
+@pytest.mark.parametrize("name", sorted(POLYBENCH))
+def test_beam_qor_at_least_greedy_polybench(name):
+    g = POLYBENCH[name]()
+    _sched, _plan, rep = optimize(g, SINGLE_POD, training=False)
+    res = rep.parallelize
+    assert rep.cost.total_s <= res.greedy_total_s
+
+
+# -- beam subsumes the deprecated seed_uniform escape hatch ------------------
+
+@pytest.mark.parametrize("arch", ["xlstm-125m", "smollm-135m",
+                                  "smollm-360m"])
+def test_beam_subsumes_seed_uniform(arch):
+    """The configs the escape hatch existed for: coordination lock-in,
+    where no single-node move can leave the all-unsharded basin.  The
+    beam must match or beat the legacy result without the hatch."""
+    beam = parallelize(_lowered_model(arch), SINGLE_POD, training=True)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = parallelize(_lowered_model(arch), SINGLE_POD,
+                             training=True, beam_width=1, seed_uniform=True)
+    assert beam.cost.total_s <= legacy.cost.total_s
+    # And the beam must genuinely escape the greedy basin here.
+    if arch in ("xlstm-125m", "smollm-135m"):
+        assert beam.cost.total_s < beam.greedy_total_s
+
+
+def test_seed_uniform_emits_deprecation_warning():
+    sched = _lowered_pb("2mm")
+    with pytest.warns(DeprecationWarning, match="seed_uniform"):
+        parallelize(sched, SINGLE_POD, training=False, seed_uniform=False)
+
+
+# -- propose/rollback leaves the estimator state bit-identical ---------------
+
+def _full_state(est: IncrementalEstimator):
+    """Every cached term plus the node objects' assignment state."""
+    return (
+        list(est._comp), list(est._mem), list(est._nbytes), list(est._red),
+        list(est._sync), list(est._reshard), list(est._contrib),
+        list(est._lat),
+        [(dict(n.unroll), dict(n.axis_map)) for n in est._nodes],
+    )
+
+
+@pytest.mark.parametrize("arch,training", [
+    ("stablelm-3b", True), ("jamba-v0.1-52b", False)])
+def test_propose_rollback_state_bit_identical(arch, training):
+    sched = _lowered_model(arch)
+    est = IncrementalEstimator(sched, SINGLE_POD, training=training)
+    rng = random.Random(99)
+    per_node = {n.name: _proposals(n, SINGLE_POD, SINGLE_POD.chips)
+                for n in sched.nodes}
+    names = [n.name for n in sched.nodes if per_node[n.name]]
+    for step in range(40):
+        # Occasionally commit so rollbacks are exercised from many states.
+        name = rng.choice(names)
+        if rng.random() < 0.3:
+            est.apply(name, rng.choice(per_node[name]))
+        before = _full_state(est)
+        est.propose(name, rng.choice(per_node[name]))
+        est.rollback()
+        assert _full_state(est) == before
+
+
+# -- graph-colored sweeps == serial sweeps ----------------------------------
+
+@pytest.mark.parametrize("arch", ["jamba-v0.1-52b", "xlstm-125m",
+                                  "deepseek-v2-236b"])
+def test_colored_sweep_matches_serial_models(arch):
+    s_colored = _lowered_model(arch)
+    r_colored = parallelize(s_colored, SINGLE_POD, training=True)
+    s_serial = _lowered_model(arch)
+    r_serial = parallelize(s_serial, SINGLE_POD, training=True,
+                           colored_sweeps=False)
+    s_threaded = _lowered_model(arch)
+    r_threaded = parallelize(s_threaded, SINGLE_POD, training=True,
+                             sweep_workers=4)
+    assert _plan_snapshot(s_colored) == _plan_snapshot(s_serial)
+    assert _plan_snapshot(s_colored) == _plan_snapshot(s_threaded)
+    assert (r_colored.cost.total_s == r_serial.cost.total_s
+            == r_threaded.cost.total_s)
+
+
+@pytest.mark.parametrize("name", sorted(POLYBENCH))
+def test_colored_sweep_matches_serial_polybench(name):
+    s_colored = _lowered_pb(name)
+    r_colored = parallelize(s_colored, SINGLE_POD, training=False)
+    s_serial = _lowered_pb(name)
+    r_serial = parallelize(s_serial, SINGLE_POD, training=False,
+                           colored_sweeps=False)
+    assert _plan_snapshot(s_colored) == _plan_snapshot(s_serial)
+    assert r_colored.cost.total_s == r_serial.cost.total_s

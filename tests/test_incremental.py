@@ -8,8 +8,13 @@ The contract under test (see ``repro.core.incremental``):
   PolyBench graph, for any state reachable through propose / commit /
   rollback (the integer terms are delta-maintained exactly; every float
   reduction re-runs in batch order).
-* ``parallelize()`` on top of it chooses the same plans the pre-refactor
-  batch-scored DSE chose (golden snapshots captured from the old code).
+* The read-only ``score()`` path (what the DSE scans and the graph-colored
+  sweeps rely on) returns exactly what propose → read → rollback would.
+* ``parallelize()`` on top of it is deterministic: golden plan snapshots,
+  originally captured from the pre-refactor batch-scored DSE and
+  re-validated under the beam-search DSE (the beam reproduces the greedy
+  plans where greedy was already optimal; ``smollm-360m`` and
+  ``xlstm-125m`` pin plans only the beam's joint moves find).
 """
 from __future__ import annotations
 
@@ -101,7 +106,13 @@ def test_propose_commit_rollback_sequences(arch, training):
         name = rng.choice(names)
         proposal = rng.choice(per_node[name])
         before = est.total_s
+        scored = est.score(name, proposal)
         est.propose(name, proposal)
+        # score() is bit-identical to propose + read, with no mutation.
+        assert scored.total_s == est.total_s
+        assert scored.hbm_bytes == est.hbm_bytes_per_device
+        assert scored.node_compute_s == est.node_compute_s(name)
+        assert scored.node_parallel_factor == est.node_parallel_factor(name)
         if rng.random() < 0.5:
             est.rollback()
             assert est.total_s == before
@@ -141,12 +152,17 @@ def test_refresh_resyncs_after_external_mutation():
     _assert_exact(est, sched, SINGLE_POD, training=False)
 
 
-# -- DSE determinism: golden plans captured from the pre-refactor code ------
+# -- DSE determinism: golden plan snapshots ---------------------------------
 #
 # Each entry: run key -> {node index: (sorted unroll items,
 # sorted (dim, axes) items)}; nodes with an empty assignment are omitted.
-# Captured from the batch-scored parallelizer immediately before the
-# incremental rewrite (same configs, SINGLE_POD, train_4k).
+# smollm-135m / stablelm-3b were captured from the batch-scored
+# parallelizer immediately before the incremental rewrite and survive the
+# beam-search DSE unchanged (the beam keeps the greedy plan when nothing
+# beats it).  smollm-360m and xlstm-125m were captured from the beam DSE:
+# both need a joint move (uniform seed / neighbourhood re-DSE) that the
+# greedy coordinate descent cannot reach (same configs, SINGLE_POD,
+# train_4k).
 
 _B, _S = ("batch", 16), ("seq", 16)
 _BD, _SM = ("batch", ("data",)), ("seq", ("model",))
@@ -165,6 +181,22 @@ _GOLDEN = {
         4: ([_B, ("d_ff", 16)], [_BD, ("d_ff", ("model",))]),
         5: ([_B, ("d_model", 16)], [_BD, ("d_model", ("model",))]),
         6: ([_B, ("vocab", 16)], [_BD, ("vocab", ("model",))]),
+    },
+    # Beam-only plans: the KV-cache update picks SP over kv_seq to stay
+    # axis-aligned with attention (a producer/consumer joint choice).
+    ("smollm-360m", True, True): {
+        0: ([_B, _S], [_BD, _SM]),
+        1: ([_B, ("kv_seq", 16)], [_BD, ("kv_seq", ("model",))]),
+        **{i: ([_B, _S], [_BD, _SM]) for i in range(2, 7)},
+    },
+    # Coordination lock-in: greedy leaves the mLSTM chain unsharded
+    # (431ms); only a uniform joint move reaches the SP basin (20.4ms).
+    ("xlstm-125m", True, True): {
+        **{i: ([_B, _S], [_BD, _SM]) for i in range(10)},
+        10: ([_B], [_BD]),
+        11: ([_B], [_BD]),
+        12: ([_B, ("vocab", 16)], [_BD, ("vocab", ("model",))]),
+        13: ([_B], [_BD]),
     },
 }
 
@@ -205,6 +237,6 @@ def test_parallelize_direct_matches_optimize_cost():
     called standalone (not through optimize)."""
     g = build_lm_graph(get_config("smollm-360m"), SHAPES["train_4k"])
     sched = _lowered(g)
-    res = parallelize(sched, SINGLE_POD, training=True, seed_uniform=True)
+    res = parallelize(sched, SINGLE_POD, training=True)
     batch = estimate(sched, SINGLE_POD, training=True)
     assert _cost_tuple(res.cost) == _cost_tuple(batch)
