@@ -8,19 +8,21 @@ from .fusion import fuse_tasks
 from .graph import build_lm_graph
 from .incremental import IncrementalEstimator
 from .ir import (AccessMap, Buffer, Graph, MemoryEffect, Node, Op, Schedule,
-                 Stream, TensorValue)
+                 ScheduleTopology, Stream, TensorValue)
 from .lower import lower_to_structural
 from .multi_producer import eliminate_multi_producers
 from .optimize import OptimizeReport, optimize
 from .parallelize import parallelize
-from .plan import ShardingPlan, build_plan, replicated_plan
+from .plan import ShardingPlan, build_plan, project_rules, replicated_plan
 
 __all__ = [
     "AccessMap", "Buffer", "Graph", "MemoryEffect", "Node", "Op",
-    "Schedule", "Stream", "TensorValue", "MeshSpec", "SINGLE_POD",
+    "Schedule", "ScheduleTopology", "Stream", "TensorValue", "MeshSpec",
+    "SINGLE_POD",
     "MULTI_POD", "estimate", "IncrementalEstimator", "roofline_terms",
     "construct_functional",
     "fuse_tasks", "lower_to_structural", "eliminate_multi_producers",
     "balance_paths", "parallelize", "ShardingPlan", "build_plan",
-    "replicated_plan", "optimize", "OptimizeReport", "build_lm_graph",
+    "project_rules", "replicated_plan", "optimize", "OptimizeReport",
+    "build_lm_graph",
 ]

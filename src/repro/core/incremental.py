@@ -15,7 +15,11 @@ structure:
   on ``unroll`` / ``axis_map``: per-node FLOPs and repeat factors, the
   per-buffer access pairs behind ``buffer_shard_factor``, per-op
   reduction-dim sets and output-shard descriptors, the shared-buffer edge
-  topology, and the weight→first-consumer sync map.
+  topology, and the weight→first-consumer sync map.  The edge/owner/access
+  structure comes from the schedule's cached
+  :class:`~repro.core.ir.ScheduleTopology` — the same substrate the plan
+  layer (``build_plan`` / ``apply_rule_change``) projects through, so the
+  optimizer and the emitted plan can never walk divergent topologies.
 * **Cached state (per node / per edge)** — the compute / memory /
   reduction terms of each node, each edge's reshard contribution, each
   node's weight-sync bytes, and the resulting per-node latency.
@@ -170,6 +174,7 @@ class IncrementalEstimator:
 
     def _build_static(self) -> None:
         sched = self.sched
+        topo = sched.topology()
         statics: list[_NodeStatic] = []
         for node in self._nodes:
             mem_terms = []
@@ -177,7 +182,7 @@ class IncrementalEstimator:
                 buf = sched.buffers.get(v)
                 if buf is None:
                     continue
-                am = node.access_for(v)
+                am = topo.access_for(node, v)
                 pairs = () if am is None else tuple(
                     (dim, buf.shape[axis])
                     for axis, (dim, _stride) in enumerate(am.entries)
@@ -211,10 +216,10 @@ class IncrementalEstimator:
         self._static = statics
 
         edges: list[_EdgeStatic] = []
-        for src, dst, bname in sched.edges():
+        for src, dst, bname in topo.edges:
             p, c = sched.node(src), sched.node(dst)
             buf = sched.buffers[bname]
-            pam, cam = p.access_for(bname), c.access_for(bname)
+            pam, cam = topo.access_for(p, bname), topo.access_for(c, bname)
             if pam is None or cam is None:
                 continue
             axes = tuple(
@@ -238,11 +243,11 @@ class IncrementalEstimator:
             for bname, buf in sched.buffers.items():
                 if not buf.is_weight:
                     continue
-                consumers = sched.consumers_of(bname)
+                consumers = topo.consumers.get(bname, ())
                 if not consumers:
                     continue
                 n = consumers[0]
-                am = n.access_for(bname)
+                am = topo.access_for(n, bname)
                 pairs = () if am is None else tuple(
                     (dim, buf.shape[axis])
                     for axis, (dim, _stride) in enumerate(am.entries)

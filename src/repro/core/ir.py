@@ -406,6 +406,101 @@ class TokenEdge:
 
 
 @dataclass
+class ScheduleTopology:
+    """Edge/access topology of a :class:`Schedule` — the shared analysis
+    substrate of the QoR estimator and the plan-projection engine.
+
+    Everything here depends only on the schedule's *structure* (nodes,
+    args, buffers, body-op access maps), never on the parallelization
+    state (``unroll`` / ``axis_map``), so one build serves the whole
+    optimize() pipeline from the DSE through plan derivation and the
+    incremental EP-widening re-projection.  Obtain it through
+    :meth:`Schedule.topology`, which caches it against a structure
+    signature and rebuilds transparently after structural mutation
+    (multi-producer elimination, balancing copies, …).
+    """
+
+    #: per buffer: producing / consuming nodes, in node order (matching
+    #: ``Schedule.producers_of`` / ``consumers_of``)
+    producers: dict[str, list[Node]]
+    consumers: dict[str, list[Node]]
+    #: (src_node, dst_node, buffer) shared-buffer edges (``Schedule.edges``)
+    edges: list[tuple[str, str, str]]
+    #: per buffer axis: the (owner node, loop dim) pairs with a non-None
+    #: access-map entry at that axis, in owner (producers + consumers) order
+    axis_owner_dims: dict[str, tuple[tuple[tuple[Node, str], ...], ...]]
+    #: per buffer axis: the coherent projection dim — the first non-None
+    #: loop dim any owner's access map names at that axis (None if none)
+    axis_dims: dict[str, tuple[Optional[str], ...]]
+    #: loop dim -> buffers whose coherent projection references it
+    buffers_of_dim: dict[str, tuple[str, ...]]
+    #: (node name, value name) -> merged access map (``Node.access_for``)
+    _access: dict[tuple[str, str], Optional[AccessMap]]
+    #: structure fingerprint this topology was built against
+    signature: tuple
+
+    def access_for(self, node: Node, value: str) -> Optional[AccessMap]:
+        """Cached ``node.access_for(value)``."""
+        key = (node.name, value)
+        if key not in self._access:
+            self._access[key] = node.access_for(value)
+        return self._access[key]
+
+    def owners(self, buf: str) -> list[Node]:
+        """Producers then consumers — the scan order of plan projection."""
+        return self.producers.get(buf, []) + self.consumers.get(buf, [])
+
+    @classmethod
+    def build(cls, sched: "Schedule") -> "ScheduleTopology":
+        producers: dict[str, list[Node]] = {}
+        consumers: dict[str, list[Node]] = {}
+        for n in sched.nodes:
+            for b in n.writes():
+                producers.setdefault(b, []).append(n)
+            for b in n.reads():
+                consumers.setdefault(b, []).append(n)
+        edges = []
+        for buf in sched.buffers:
+            for p in producers.get(buf, ()):
+                for c in consumers.get(buf, ()):
+                    if p.name != c.name:
+                        edges.append((p.name, c.name, buf))
+        access: dict[tuple[str, str], Optional[AccessMap]] = {}
+        axis_owner_dims: dict[str, tuple] = {}
+        axis_dims: dict[str, tuple] = {}
+        buffers_of_dim: dict[str, list[str]] = {}
+        for bname, buf in sched.buffers.items():
+            owners = producers.get(bname, []) + consumers.get(bname, [])
+            per_axis: list[tuple[tuple[Node, str], ...]] = []
+            dims: list[Optional[str]] = []
+            for axis in range(len(buf.shape)):
+                pairs = []
+                for node in owners:
+                    key = (node.name, bname)
+                    if key not in access:
+                        access[key] = node.access_for(bname)
+                    am = access[key]
+                    if am is None or axis >= len(am.entries):
+                        continue
+                    d = am.entries[axis][0]
+                    if d is not None:
+                        pairs.append((node, d))
+                per_axis.append(tuple(pairs))
+                dims.append(pairs[0][1] if pairs else None)
+            axis_owner_dims[bname] = tuple(per_axis)
+            axis_dims[bname] = tuple(dims)
+            for d in dims:
+                if d is not None and (d not in buffers_of_dim
+                                      or buffers_of_dim[d][-1] != bname):
+                    buffers_of_dim.setdefault(d, []).append(bname)
+        return cls(
+            producers=producers, consumers=consumers, edges=edges,
+            axis_owner_dims=axis_owner_dims, axis_dims=axis_dims,
+            buffers_of_dim={d: tuple(v) for d, v in buffers_of_dim.items()},
+            _access=access, signature=sched.structure_signature())
+
+
+@dataclass
 class Schedule:
     """Structural dataflow schedule: isolated region of nodes + buffers."""
 
@@ -420,12 +515,43 @@ class Schedule:
     # Byte size of every value (incl. node-internal temporaries) — used by
     # the estimator for intra-node reduction-collective costs.
     value_bytes: dict[str, int] = field(default_factory=dict)
+    # Cached ScheduleTopology (see topology()); never compared/printed.
+    _topology: Optional[ScheduleTopology] = field(
+        default=None, repr=False, compare=False)
 
     def node(self, name: str) -> Node:
         for n in self.nodes:
             if n.name == name:
                 return n
         raise KeyError(name)
+
+    # -- shared topology cache ------------------------------------------------
+    def structure_signature(self) -> tuple:
+        """Cheap fingerprint of everything :class:`ScheduleTopology` depends
+        on: node identities, their argument effects and body sizes (access
+        maps live in body ops; structural passes that rewire them always
+        rename args or insert ops too), buffer shapes/dims (axis_dims is
+        per buffer axis), and the buffer/arg sets.  The parallelization
+        state (``unroll`` / ``axis_map``) is deliberately excluded —
+        topology is assignment-independent."""
+        return (
+            tuple((n.name, tuple(n.args.items()), len(n.body))
+                  for n in self.nodes),
+            tuple((b, buf.shape, buf.dims)
+                  for b, buf in self.buffers.items()),
+            tuple(self.args))
+
+    def topology(self) -> ScheduleTopology:
+        """The cached :class:`ScheduleTopology`, rebuilt transparently when
+        the structure signature no longer matches (e.g. after
+        multi-producer elimination or balancing inserted nodes)."""
+        if (self._topology is None
+                or self._topology.signature != self.structure_signature()):
+            self._topology = ScheduleTopology.build(self)
+        return self._topology
+
+    def invalidate_topology(self) -> None:
+        self._topology = None
 
     def is_internal(self, buf: str) -> bool:
         """A buffer allocated inside this schedule (not an argument).
@@ -450,23 +576,10 @@ class Schedule:
     def edges(self) -> list[tuple[str, str, str]]:
         """(src_node, dst_node, buffer) edges via shared buffers.
 
-        One pass over the nodes builds the per-buffer producer/consumer
-        lists (in node order, matching ``producers_of``/``consumers_of``)
-        instead of rescanning every node per buffer."""
-        prod: dict[str, list[Node]] = {}
-        cons: dict[str, list[Node]] = {}
-        for n in self.nodes:
-            for b in n.writes():
-                prod.setdefault(b, []).append(n)
-            for b in n.reads():
-                cons.setdefault(b, []).append(n)
-        out = []
-        for buf in self.buffers:
-            for p in prod.get(buf, ()):
-                for c in cons.get(buf, ()):
-                    if p.name != c.name:
-                        out.append((p.name, c.name, buf))
-        return out
+        Served from the cached :class:`ScheduleTopology` (one pass over
+        the nodes builds the per-buffer producer/consumer lists in node
+        order, matching ``producers_of``/``consumers_of``)."""
+        return list(self.topology().edges)
 
     def topo_order(self) -> list[Node]:
         """Topological order over buffer edges (stable; raises on cycles

@@ -34,6 +34,9 @@ class OptimizeReport:
     parallelize: ParallelizeResult | None = None
     cost: ScheduleCost | None = None
     compile_time_s: float = 0.0
+    #: wall time of plan derivation (build_plan + EP widening + role
+    #: aliasing) — tracked by benchmarks/bench_compile_time.py.
+    plan_time_s: float = 0.0
     meta: dict = field(default_factory=dict)
 
 
@@ -97,8 +100,23 @@ def optimize(graph: Graph, mesh: MeshSpec, *,
     report.cost = (report.parallelize.cost
                    if report.parallelize.cost is not None
                    else estimate(sched, mesh, training=training))
+
+    # Plan derivation runs on the same cached topology the estimator's DSE
+    # used (sched.topology()): build_plan projects through it, and the EP
+    # widening below re-projects O(Δ) through ShardingPlan.apply_rule_change
+    # instead of a full project_rules rebuild.
+    t_plan = time.perf_counter()
+    topo = sched.topology()
     plan = build_plan(sched, mesh, fsdp=fsdp, coherent=ca,
-                      meta={"graph": graph.name, "ia": ia, "ca": ca})
+                      meta={"graph": graph.name, "ia": ia, "ca": ca},
+                      topology=topo)
+
+    # Strip per-layer prefixes so models can look up role sites
+    # ("qkv", "attn_ctx", "ffn_hidden", …) regardless of block index.
+    # Registered as aliases so later delta re-projections keep them fresh.
+    for bname in list(plan.buffer_specs):
+        if "__" in bname:
+            plan.add_role_alias(bname.split("__", 1)[1], bname)
 
     # Capacity-driven EP widening (DeepSeek-scale expert counts): when the
     # expert weights at the chosen EP degree exceed the per-device HBM
@@ -122,7 +140,6 @@ def optimize(graph: Graph, mesh: MeshSpec, *,
                         and n_exp % (shard * mesh.size(a)) == 0):
                     cur = cur + (a,)
                     shard *= mesh.size(a)
-                    plan.rules["experts"] = cur
                     plan.meta["ep_widened"] = list(cur)
                     widened = True
             if not widened and "data" in mesh.names \
@@ -130,18 +147,17 @@ def optimize(graph: Graph, mesh: MeshSpec, *,
                 # Expert count divides data but not data×model (e.g.
                 # deepseek-v2's 160): EP over data + Megatron expert-TP
                 # over model (d_ff column/row split + psum).
-                plan.rules["experts"] = ("data",)
+                cur = ("data",)
                 plan.meta["moe_tp"] = "model"
                 plan.meta["ep_widened"] = ["data", "+tp:model"]
-            from .plan import project_rules
-            project_rules(plan, sched)
-
-    # Strip per-layer prefixes so models can look up role sites
-    # ("qkv", "attn_ctx", "ffn_hidden", …) regardless of block index.
-    for bname in list(plan.buffer_specs):
-        if "__" in bname:
-            role = bname.split("__", 1)[1]
-            plan.buffer_specs.setdefault(role, plan.buffer_specs[bname])
+                widened = True
+            if widened:
+                # Delta re-projection: only the buffer sites whose access
+                # maps reference "experts" (plus their role aliases) are
+                # rewritten — bit-identical to a full project_rules rebuild
+                # (tests/test_plan.py sweeps every config × shape).
+                plan.apply_rule_change("experts", cur, sched, topo)
+    report.plan_time_s = time.perf_counter() - t_plan
 
     report.compile_time_s = time.perf_counter() - t0
     report.meta = {"nodes": len(sched.nodes),

@@ -156,10 +156,12 @@ class Connection:
 
 
 def analyze_connections(sched: Schedule) -> list[Connection]:
+    topo = sched.topology()
     conns: list[Connection] = []
-    for src, dst, bname in sched.edges():
+    for src, dst, bname in topo.edges:
         p, c = sched.node(src), sched.node(dst)
-        pam, cam = p.access_for(bname), c.access_for(bname)
+        pam = topo.access_for(p, bname)
+        cam = topo.access_for(c, bname)
         if pam is None or cam is None:
             continue
         axes = tuple(
@@ -189,16 +191,21 @@ def connection_count(sched: Schedule,
 def parallel_factors(sched: Schedule, max_pf: int, ia: bool
                      ) -> dict[str, int]:
     """pf(node) ∝ intensity, rounded up to a power of two, capped at
-    ``max_pf`` (paper Table 5).  Without IA every node gets ``max_pf``."""
+    ``max_pf`` (paper Table 5).  Without IA every node gets ``max_pf``.
+
+    The power-of-two rounding is integer bit-length arithmetic: the
+    smallest power of two ≥ x equals the smallest power of two ≥ ⌈x⌉, and
+    ``1 << (need - 1).bit_length()`` computes the latter exactly — unlike
+    ``2 ** ceil(log2(x))``, whose float log could round an exact power of
+    two up a full octave."""
     if not ia:
         return {n.name: max_pf for n in sched.nodes}
     peak = max((n.intensity() for n in sched.nodes), default=1) or 1
     out: dict[str, int] = {}
     for n in sched.nodes:
         share = n.intensity() / peak
-        pf = max(1, min(max_pf, 2 ** math.ceil(math.log2(max(
-            share * max_pf, 1)))))
-        out[n.name] = pf
+        need = max(1, math.ceil(share * max_pf))
+        out[n.name] = max(1, min(max_pf, 1 << (need - 1).bit_length()))
     return out
 
 

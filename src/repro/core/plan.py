@@ -20,6 +20,7 @@ artifacts can be diffed across perf iterations.
 from __future__ import annotations
 
 import json
+import logging
 from collections import Counter
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
@@ -28,7 +29,9 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .estimator import MeshSpec
-from .ir import Schedule
+from .ir import Schedule, ScheduleTopology
+
+logger = logging.getLogger(__name__)
 
 Axes = tuple[str, ...]
 
@@ -40,6 +43,16 @@ class ShardingPlan:
     rules: dict[str, Axes] = field(default_factory=dict)
     fsdp: bool = False
     meta: dict = field(default_factory=dict)
+    #: role alias -> source buffer site (e.g. ``"qkv" -> "L0__qkv"``); the
+    #: alias's spec in ``buffer_specs`` mirrors the source's and is kept in
+    #: step by :meth:`apply_rule_change`.  Derivable from the names, so it
+    #: is not serialized.
+    role_sources: dict[str, str] = field(default_factory=dict)
+    #: site -> count of overrides dropped by :meth:`spec_for_dims` because
+    #: the stored per-dim rank mismatched the queried dims.  A diagnostic
+    #: populated on the query path, so kept out of ``meta`` / ``to_json``
+    #: — the serialized plan stays pure data, independent of query history.
+    spec_rank_mismatches: dict[str, int] = field(default_factory=dict)
 
     # -- spec construction ---------------------------------------------------
     def _dedupe(self, axes_per_dim: Sequence[Axes]) -> tuple:
@@ -63,11 +76,20 @@ class ShardingPlan:
     def spec_for_dims(self, dims: Sequence[str],
                       site: str | None = None) -> P:
         """PartitionSpec for a tensor described by logical dim names,
-        honouring a buffer-site override when given."""
+        honouring a buffer-site override when given.  A site override
+        whose stored rank mismatches ``dims`` (common for role aliases
+        stripped from layer-prefixed names) falls back to the rules — the
+        drop is counted in :attr:`spec_rank_mismatches` (and debug-logged)
+        so silently replicated tensors are diagnosable."""
         if site is not None and site in self.buffer_specs:
             per_dim = self.buffer_specs[site]
             if len(per_dim) == len(dims):
                 return P(*self._dedupe(per_dim))
+            mm = self.spec_rank_mismatches
+            mm[site] = mm.get(site, 0) + 1
+            logger.debug(
+                "spec_for_dims: site %r override rank %d != dims %r; "
+                "falling back to rules", site, len(per_dim), tuple(dims))
         per_dim = [self.rules.get(d, ()) for d in dims]
         return P(*self._dedupe(per_dim))
 
@@ -87,7 +109,7 @@ class ShardingPlan:
         used = {a for entry in spec if entry
                 for a in ((entry,) if isinstance(entry, str) else entry)}
 
-        def place(axis_name: int, i: int) -> None:
+        def place(axis_name: str, i: int) -> None:
             entry = spec[i]
             if entry is None:
                 spec[i] = axis_name
@@ -143,6 +165,52 @@ class ShardingPlan:
                 else self.spec_for_dims(dims, site))
         return NamedSharding(mesh, spec)
 
+    # -- incremental re-projection --------------------------------------------
+    def add_role_alias(self, role: str, source: str) -> None:
+        """Expose ``source``'s spec under the stripped role name (first
+        writer wins, matching ``setdefault``); the alias tracks its source
+        through later :meth:`apply_rule_change` re-projections."""
+        if role in self.buffer_specs or source not in self.buffer_specs:
+            return
+        self.buffer_specs[role] = self.buffer_specs[source]
+        self.role_sources[role] = source
+
+    def apply_rule_change(self, dim: str, axes: Axes,
+                          sched: Schedule,
+                          topology: ScheduleTopology | None = None
+                          ) -> list[str]:
+        """Delta re-projection: set ``rules[dim] = axes`` (empty ``axes``
+        deletes the rule) and re-project **only** the buffer sites whose
+        coherent access maps reference ``dim`` — plus their role aliases —
+        instead of rebuilding every spec like :func:`project_rules`.
+
+        Requires the plan to be coherent (every site already the
+        projection of the current rules, i.e. built with
+        ``coherent=True`` and mutated only through this method); then the
+        result is bit-identical to a full :func:`project_rules` rebuild
+        under the new rules.  Returns the re-projected site names."""
+        if axes:
+            self.rules[dim] = tuple(axes)
+        else:
+            self.rules.pop(dim, None)
+        topo = topology or sched.topology()
+        changed: list[str] = []
+        for bname in topo.buffers_of_dim.get(dim, ()):
+            if bname not in self.buffer_specs:
+                continue
+            per_dim = _projected_spec(self.rules, topo.axis_dims[bname])
+            self.buffer_specs[bname] = per_dim
+            buf = sched.buffers.get(bname)
+            if buf is not None:
+                buf.spec = per_dim
+            changed.append(bname)
+        touched = set(changed)
+        for role, source in self.role_sources.items():
+            if source in touched:
+                self.buffer_specs[role] = self.buffer_specs[source]
+                changed.append(role)
+        return changed
+
     # -- serialisation ----------------------------------------------------------
     def to_json(self) -> str:
         return json.dumps({
@@ -165,9 +233,25 @@ def replicated_plan(mesh_spec: MeshSpec, data_axes: Axes = ("pod", "data"),
                         meta={"strategy": "naive-dp"})
 
 
+def _projected_spec(rules: dict[str, Axes],
+                    axis_dims: Sequence[Optional[str]]) -> tuple[Axes, ...]:
+    """THE projection routine: per-buffer spec as the consensus rules seen
+    through the buffer's coherent per-axis loop dims (first non-None dim
+    any owner's access map names at each axis — see
+    ``ScheduleTopology.axis_dims``).  Both the full rebuild
+    (:func:`project_rules`) and the delta path
+    (:meth:`ShardingPlan.apply_rule_change`) go through here, so they
+    cannot diverge.  Scanning *all* owners per axis (not just the first
+    owner with any access map) is what fixes the silent-unshard hazard:
+    a producer whose access map has ``None`` at an axis no longer hides a
+    consumer's loop dim there."""
+    return tuple(rules.get(d, ()) if d else () for d in axis_dims)
+
+
 def build_plan(sched: Schedule, mesh_spec: MeshSpec,
                fsdp: bool = False, meta: dict | None = None,
-               coherent: bool = True) -> ShardingPlan:
+               coherent: bool = True,
+               topology: ScheduleTopology | None = None) -> ShardingPlan:
     """Derive the :class:`ShardingPlan` from a parallelized schedule.
 
     Runs after the DSE (greedy + beam search, see
@@ -191,39 +275,31 @@ def build_plan(sched: Schedule, mesh_spec: MeshSpec,
             train_4k this triggers GSPMD "involuntary full
             rematerialization" and ~2.3 TiB/device of temp — the TPU
             incarnation of the paper's Fig. 11 'flawed designs'.
+        topology: the shared :class:`ScheduleTopology`; defaults to the
+            schedule's cached one (the same structure the incremental
+            estimator's DSE ran on).
     """
     plan = ShardingPlan(mesh_spec=mesh_spec, fsdp=fsdp, meta=meta or {})
+    topo = topology or sched.topology()
 
     votes: dict[str, Counter] = {}
     for bname, buf in sched.buffers.items():
-        producers = sched.producers_of(bname)
-        consumers = sched.consumers_of(bname)
-        owners = producers + consumers
-        if not owners:
+        if not topo.owners(bname):
             continue
         per_dim: list[Axes] = []
-        rank = len(buf.shape)
-        for axis_idx in range(rank):
+        for pairs in topo.axis_owner_dims[bname]:
             axes: Axes = ()
-            dim = None
             # Producer's layout wins; an unparallelized producer (e.g. the
             # amortized embed node, pf=1) defers to its consumers so the
             # buffer does not force a reshard at every layer boundary.
-            for node in owners:
-                am = node.access_for(bname)
-                if am is None or axis_idx >= len(am.entries):
-                    continue
-                d = am.entries[axis_idx][0]
-                if d is None:
-                    continue
-                dim = dim or d
+            for node, d in pairs:
                 a = tuple(node.axis_map.get(d, ()))
                 if a:
                     axes = a
                     break
             per_dim.append(axes)
-            if dim:
-                votes.setdefault(dim, Counter())[axes] += 1
+            if pairs:
+                votes.setdefault(pairs[0][1], Counter())[axes] += 1
         plan.buffer_specs[bname] = tuple(per_dim)
         buf.spec = tuple(per_dim)
 
@@ -239,26 +315,25 @@ def build_plan(sched: Schedule, mesh_spec: MeshSpec,
             plan.rules[dim] = winner
 
     if coherent:
-        project_rules(plan, sched)
+        project_rules(plan, sched, topology=topo)
     return plan
 
 
-def project_rules(plan: ShardingPlan, sched: Schedule) -> None:
+def project_rules(plan: ShardingPlan, sched: Schedule,
+                  topology: ScheduleTopology | None = None) -> None:
     """Rewrite every buffer site as the projection of the consensus rules
-    — one layout basin across the whole dataflow."""
+    — one layout basin across the whole dataflow.  This is the full
+    rebuild; :meth:`ShardingPlan.apply_rule_change` is the O(Δ) path for
+    a single-rule update.  Both run the same projection
+    (:func:`_projected_spec`) over the same cached per-axis dims, so a
+    delta-maintained plan and a from-scratch rebuild are bit-identical."""
+    topo = topology or sched.topology()
     for bname, buf in sched.buffers.items():
         if bname not in plan.buffer_specs:
             continue
-        am = None
-        for node in (sched.producers_of(bname)
-                     or sched.consumers_of(bname)):
-            am = node.access_for(bname)
-            if am is not None:
-                break
-        if am is None:
-            continue
-        per_dim = tuple(
-            plan.rules.get(dim, ()) if dim else ()
-            for dim, _ in am.entries)
+        per_dim = _projected_spec(plan.rules, topo.axis_dims[bname])
         plan.buffer_specs[bname] = per_dim
         buf.spec = per_dim
+    for role, source in plan.role_sources.items():
+        if source in plan.buffer_specs:
+            plan.buffer_specs[role] = plan.buffer_specs[source]

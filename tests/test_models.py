@@ -30,6 +30,7 @@ def _batch_for(cfg, B, S, rng=RNG):
 # Per-arch smoke: one train step on a reduced config (deliverable f)
 # --------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", list_archs())
 def test_arch_smoke_train_step(arch):
     cfg = get_config(arch, smoke=True)
@@ -50,6 +51,7 @@ def test_arch_smoke_train_step(arch):
     assert jax.tree.structure(grads) == jax.tree.structure(params)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", list_archs())
 def test_arch_smoke_decode_shapes(arch):
     cfg = get_config(arch, smoke=True)
@@ -85,6 +87,7 @@ def test_arch_smoke_decode_shapes(arch):
     "xlstm-125m",         # mLSTM/sLSTM states
     "musicgen-large",     # audio frontend
 ])
+@pytest.mark.slow
 def test_decode_matches_parallel(arch):
     cfg = get_config(arch, smoke=True)
     lm = LM(cfg, remat="none")
@@ -207,6 +210,7 @@ def test_moe_dispatch_indices_invariants():
         assert kept == min(assigned, cap)
 
 
+@pytest.mark.slow
 def test_moe_matches_dense_reference_when_no_drop():
     """With capacity ≥ T·K the sort-based dispatch must equal the
     brute-force dense (every-expert) weighted combination."""

@@ -27,6 +27,7 @@ def _run(n_devices: int, code: str) -> str:
     return out.stdout
 
 
+@pytest.mark.slow
 def test_dryrun_reduced_mesh_compiles():
     out = _run(8, """
         import jax
@@ -54,6 +55,7 @@ def test_dryrun_reduced_mesh_compiles():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_gpipe_pipeline_matches_sequential():
     out = _run(4, """
         import jax, jax.numpy as jnp, numpy as np
@@ -81,6 +83,7 @@ def test_gpipe_pipeline_matches_sequential():
     assert "OK pipeline" in out
 
 
+@pytest.mark.slow
 def test_ep_moe_matches_global():
     out = _run(4, """
         import jax, jax.numpy as jnp, numpy as np

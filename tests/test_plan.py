@@ -1,0 +1,253 @@
+"""Plan-layer contracts: unified coherent projection, the delta
+re-projection API, and the EP-widening arms of ``optimize()``.
+
+What is pinned here (see ``repro.core.plan``):
+
+* **One projection routine** — ``build_plan``'s per-buffer scan,
+  ``project_rules``'s full rebuild and ``ShardingPlan.apply_rule_change``'s
+  delta path all project through the schedule's cached
+  ``ScheduleTopology.axis_dims`` (first non-None loop dim *any* owner
+  names per buffer axis).  The historical ``project_rules`` walked only
+  the first owner's access map, silently replicating axes that owner did
+  not name — the regression test below builds exactly that shape.
+* **Delta == rebuild, bit-identically** — after a full ``optimize()``
+  (whose EP widening uses ``apply_rule_change``), ``plan.to_json()``
+  equals a from-scratch ``build_plan`` + ``project_rules`` rebuild on
+  every registered config × applicable shape.
+* **EP widening arms** — widened-over-data (deepseek-v3), the ``moe_tp``
+  fallback (deepseek-v2: expert count divides ``data`` but not
+  ``data × model``), and the no-widen small-MoE case (jamba); widening
+  must leave non-expert buffer specs untouched.
+* **Intensity-proportional parallel factors** — powers of two, capped,
+  monotone in intensity (integer bit-length rounding, no float log2).
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.core import (SINGLE_POD, AccessMap, Buffer, MemoryEffect, Node,
+                        Op, Schedule, ShardingPlan, build_lm_graph,
+                        build_plan, optimize, project_rules)
+from repro.core.parallelize import parallel_factors
+
+
+# -- the first-owner access-map hazard (regression) --------------------------
+
+def _hazard_schedule() -> Schedule:
+    """Producer's access map has ``None`` at an axis the consumer names:
+    the coherent projection must still shard that axis from the rules."""
+    sched = Schedule(name="hazard")
+    sched.buffers["B"] = Buffer(name="B", shape=(64, 64), dims=("a", "b"))
+    p = Node(name="P", args={"B": MemoryEffect.WRITE}, body=[
+        Op(name="p0", kind="prod", ins=[], outs=["B"], loop_dims={"a": 64},
+           access={"B": AccessMap.of(("a", 1), (None, 1))})])
+    c = Node(name="C", args={"B": MemoryEffect.READ}, body=[
+        Op(name="c0", kind="cons", ins=["B"], outs=[],
+           loop_dims={"a": 64, "b": 64},
+           access={"B": AccessMap.of(("a", 1), ("b", 1))})])
+    p.axis_map = {"a": ("data",)}
+    p.unroll = {"a": 16}
+    c.axis_map = {"a": ("data",), "b": ("model",)}
+    c.unroll = {"a": 16, "b": 16}
+    sched.nodes = [p, c]
+    return sched
+
+
+def test_project_rules_scans_all_owners_per_axis():
+    """The coherent projection shards axis 1 from the consumer's loop dim
+    even though the *first* owner (the producer) has ``None`` there —
+    previously ``project_rules`` stopped at the producer's access map and
+    silently replicated the axis."""
+    sched = _hazard_schedule()
+    plan = build_plan(sched, SINGLE_POD, coherent=True)
+    assert plan.rules == {"a": ("data",), "b": ("model",)}
+    assert plan.buffer_specs["B"] == (("data",), ("model",))
+    assert sched.buffers["B"].spec == (("data",), ("model",))
+    # The cached topology records the coherent per-axis dims.
+    assert sched.topology().axis_dims["B"] == ("a", "b")
+
+
+def test_apply_rule_change_matches_full_rebuild():
+    """Delta re-projection touches exactly the sites referencing the dim
+    (plus role aliases) and lands bit-identical to a full rebuild."""
+    sched = _hazard_schedule()
+    plan = build_plan(sched, SINGLE_POD, coherent=True)
+    plan.add_role_alias("role_b", "B")
+    assert plan.buffer_specs["role_b"] == plan.buffer_specs["B"]
+
+    changed = plan.apply_rule_change("b", ("model", "data"), sched)
+    assert set(changed) == {"B", "role_b"}
+    assert plan.buffer_specs["B"] == (("data",), ("model", "data"))
+    assert plan.buffer_specs["role_b"] == plan.buffer_specs["B"]
+
+    rebuilt = build_plan(sched, SINGLE_POD, coherent=True)
+    rebuilt.add_role_alias("role_b", "B")
+    rebuilt.rules["b"] = ("model", "data")
+    project_rules(rebuilt, sched)
+    assert plan.to_json() == rebuilt.to_json()
+
+    # Deleting a rule (empty axes) un-shards the axis on the delta path.
+    plan.apply_rule_change("b", (), sched)
+    assert "b" not in plan.rules
+    assert plan.buffer_specs["B"] == (("data",), ())
+    assert plan.buffer_specs["role_b"] == (("data",), ())
+
+
+# -- spec_for_dims site-override rank mismatches -----------------------------
+
+def test_spec_for_dims_records_rank_mismatch():
+    plan = ShardingPlan(mesh_spec=SINGLE_POD)
+    plan.buffer_specs["qkv"] = (("data",), (), ("model",))
+    plan.rules = {"batch": ("data",)}
+    # Matching rank: the override applies, nothing is recorded.
+    assert (plan.spec_for_dims(("batch", "seq", "heads"), site="qkv")
+            == P("data", None, "model"))
+    assert plan.spec_rank_mismatches == {}
+    # Rank mismatch (role alias stripped from a different-rank site):
+    # falls back to the rules and counts the dropped override.
+    base_json = plan.to_json()
+    assert plan.spec_for_dims(("batch", "d_model"), site="qkv") == P("data")
+    assert plan.spec_rank_mismatches == {"qkv": 1}
+    plan.spec_for_dims(("batch",), site="qkv")
+    assert plan.spec_rank_mismatches == {"qkv": 2}
+    # Unknown sites are not overrides and are not counted.
+    plan.spec_for_dims(("batch",), site="nope")
+    assert plan.spec_rank_mismatches == {"qkv": 2}
+    # The diagnostic never leaks into the serialized artifact: the plan
+    # stays pure data, independent of query history.
+    assert plan.to_json() == base_json
+
+
+# -- intensity-proportional parallel factors --------------------------------
+
+@pytest.mark.parametrize("arch", ["jamba-v0.1-52b", "deepseek-v2-236b"])
+@pytest.mark.parametrize("max_pf", [1, 4, 16, 256])
+def test_parallel_factors_properties(arch, max_pf):
+    """Every pf is a power of two, ≤ max_pf, and monotone in intensity."""
+    from repro.core import (construct_functional, fuse_tasks,
+                            lower_to_structural)
+    g = build_lm_graph(get_config(arch), SHAPES["train_4k"])
+    construct_functional(g)
+    fuse_tasks(g)
+    sched = lower_to_structural(g)
+    pf = parallel_factors(sched, max_pf=max_pf, ia=True)
+    by_intensity = sorted(sched.nodes, key=lambda n: n.intensity())
+    for n in sched.nodes:
+        v = pf[n.name]
+        assert v >= 1 and v <= max_pf
+        assert v & (v - 1) == 0, f"{n.name}: pf {v} not a power of two"
+    for lo, hi in zip(by_intensity, by_intensity[1:]):
+        assert pf[lo.name] <= pf[hi.name]
+    # The peak-intensity node always gets the full budget.
+    assert pf[by_intensity[-1].name] == max_pf
+
+
+# -- EP-widening arms of optimize() ------------------------------------------
+
+def _optimized(arch):
+    g = build_lm_graph(get_config(arch), SHAPES["train_4k"])
+    return optimize(g, SINGLE_POD)
+
+
+def _mesh_prod(axes):
+    f = 1
+    for a in axes:
+        f *= SINGLE_POD.size(a)
+    return f
+
+
+def _expert_count(sched):
+    b = next(b for b in sched.buffers.values()
+             if b.is_weight and "experts" in b.dims)
+    return b.shape[b.dims.index("experts")]
+
+
+def _non_expert_specs_match_unwidened(sched, plan):
+    """Re-projection after widening must leave every buffer whose access
+    maps do not reference "experts" bit-identical to the unwidened plan."""
+    topo = sched.topology()
+    unwidened = build_plan(sched, SINGLE_POD, coherent=True, topology=topo)
+    for bname, spec in unwidened.buffer_specs.items():
+        if "experts" in topo.axis_dims[bname]:
+            continue
+        assert plan.buffer_specs[bname] == spec, bname
+
+
+def test_ep_widening_over_data_deepseek_v3():
+    """256 experts divide data×model: EP widens over the data axis."""
+    sched, plan, _rep = _optimized("deepseek-v3-671b")
+    axes = plan.rules["experts"]
+    assert "data" in axes
+    assert plan.meta["ep_widened"] == list(axes)
+    assert "moe_tp" not in plan.meta
+    assert _expert_count(sched) % _mesh_prod(axes) == 0
+    _non_expert_specs_match_unwidened(sched, plan)
+
+
+def test_ep_widening_moe_tp_fallback_deepseek_v2():
+    """160 experts divide data (16) but not data×model (256): EP over data
+    plus Megatron expert-TP over model."""
+    sched, plan, _rep = _optimized("deepseek-v2-236b")
+    assert plan.rules["experts"] == ("data",)
+    assert plan.meta["moe_tp"] == "model"
+    assert plan.meta["ep_widened"] == ["data", "+tp:model"]
+    assert _expert_count(sched) % SINGLE_POD.size("data") == 0
+    assert _expert_count(sched) % (SINGLE_POD.size("data")
+                                   * SINGLE_POD.size("model")) != 0
+    _non_expert_specs_match_unwidened(sched, plan)
+
+
+def test_ep_no_widen_small_moe_jamba():
+    """Small MoE under the HBM budget: the DSE's choice stands, no
+    widening metadata, and the plan equals the plain coherent build."""
+    sched, plan, _rep = _optimized("jamba-v0.1-52b")
+    assert "ep_widened" not in plan.meta
+    assert "moe_tp" not in plan.meta
+    unwidened = build_plan(sched, SINGLE_POD, coherent=True)
+    for bname, spec in unwidened.buffer_specs.items():
+        assert plan.buffer_specs[bname] == spec, bname
+
+
+# -- delta projection == from-scratch rebuild, every config × shape ----------
+
+def _assert_delta_matches_rebuild(arch: str, shape: str) -> None:
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, SHAPES[shape])
+    if not ok:
+        pytest.skip(why)
+    g = build_lm_graph(cfg, SHAPES[shape])
+    sched, plan, _rep = optimize(g, SINGLE_POD)
+
+    rebuilt = build_plan(sched, SINGLE_POD, fsdp=plan.fsdp,
+                         meta=dict(plan.meta), coherent=True)
+    for bname in list(rebuilt.buffer_specs):
+        if "__" in bname:
+            rebuilt.add_role_alias(bname.split("__", 1)[1], bname)
+    if "experts" in plan.rules:
+        rebuilt.rules["experts"] = plan.rules["experts"]
+    project_rules(rebuilt, sched)
+    assert plan.to_json() == rebuilt.to_json()
+
+
+_FAST_CELLS = [("deepseek-v3-671b", "train_4k"),
+               ("deepseek-v2-236b", "train_4k"),
+               ("smollm-360m", "prefill_32k")]
+
+
+@pytest.mark.parametrize("arch,shape", _FAST_CELLS)
+def test_delta_projection_bit_identical(arch, shape):
+    _assert_delta_matches_rebuild(arch, shape)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("shape", sorted(SHAPES))
+@pytest.mark.parametrize("arch", list_archs())
+def test_delta_projection_bit_identical_sweep(arch, shape):
+    _assert_delta_matches_rebuild(arch, shape)

@@ -155,6 +155,7 @@ def test_checkpoint_gc_keeps_latest(tmp_path):
     assert mgr.steps() == [3, 4]
 
 
+@pytest.mark.slow
 def test_train_resume_bitwise(tmp_path):
     """Kill at step 6, restart, and verify the loss trajectory matches an
     uninterrupted run (checkpoint/restart fault tolerance)."""
@@ -213,6 +214,7 @@ def test_straggler_recovery_clears_flag():
     assert mon.stragglers() == []
 
 
+@pytest.mark.slow
 def test_grad_accumulation_matches_full_batch():
     """build_train_step(accum_steps=K) must produce (numerically) the
     same update as the full-batch step on a dense arch."""

@@ -9,6 +9,7 @@ from repro.configs import SHAPES, get_config, list_archs, shape_applicable
 from repro.core import SINGLE_POD, MULTI_POD, build_lm_graph, optimize
 
 
+@pytest.mark.slow
 def test_train_loss_decreases_end_to_end(tmp_path):
     from repro.launch.train import main as train_main
     out = train_main(["--arch", "smollm-135m", "--smoke", "--steps", "40",
@@ -37,6 +38,7 @@ def test_plan_roundtrips_json():
     assert blob["mesh"] == [["data", 16], ["model", 16]]
 
 
+@pytest.mark.slow
 def test_every_cell_has_plan():
     """HIDA-OPT must produce a plan for all 40 (arch x shape) cells on
     both meshes without raising (the dry-run compiles them; this guards
