@@ -25,10 +25,12 @@ Regression gate (CI)::
         --compare BENCH_compile_time.json [--threshold 2.0] [--fast]
 
 re-runs the suite and exits nonzero when any arm's ``optimize()``
-wall-time exceeds ``threshold ×`` the committed baseline (arms faster
+wall-time — or its total pre-DSE structural-pass time (``fuse_s +
+lower_s + mp_s + balance_s``, the passes on the transactional rewrite
+substrate) — exceeds ``threshold ×`` the committed baseline (arms faster
 than ``--min-delta-s`` absolute growth are ignored — the PolyBench arms
 run in single-digit milliseconds and would otherwise gate on scheduler
-noise).  QoR (``total_s``) drift is reported alongside and fails the
+noise; the pre-DSE check has its own ``PRE_DSE_MIN_DELTA_S`` guard).  QoR (``total_s``) drift is reported alongside and fails the
 gate when the estimated schedule got *worse* — compile-time wins must
 not be bought with QoR.  In compare mode the fresh results go to a
 scratch dir (unless ``REPRO_BENCH_OUT_DIR`` is set) so a failing run
@@ -61,6 +63,13 @@ def _time_optimize(graph_builder, training: bool) -> dict:
     return {
         "wall_s": dt,
         "plan_s": rep.plan_time_s,
+        # Per-pass wall time of the pre-DSE structural passes (all on the
+        # transactional rewrite substrate); their sum gates in --compare.
+        "fuse_s": rep.fuse_s,
+        "lower_s": rep.lower_s,
+        "mp_s": rep.mp_s,
+        "balance_s": rep.balance_s,
+        "pre_dse_s": rep.pre_dse_s,
         "nodes": len(sched.nodes),
         "evaluated": rep.parallelize.evaluated,
         "rejected_constraint": rep.parallelize.rejected_constraint,
@@ -80,13 +89,15 @@ def run(report, archs=None, fast: bool = False) -> dict:
         results[f"model/{arch}"] = r
         report.add(f"compile_time/{arch}", us_per_call=r["wall_s"] * 1e6,
                    derived=f"nodes={r['nodes']}|evaluated={r['evaluated']}"
-                           f"|plan_ms={r['plan_s'] * 1e3:.3f}")
+                           f"|plan_ms={r['plan_s'] * 1e3:.3f}"
+                           f"|pre_dse_ms={r['pre_dse_s'] * 1e3:.3f}")
     for name in (PB_ARMS[:2] if fast else PB_ARMS):
         r = _time_optimize(POLYBENCH[name], training=False)
         results[f"polybench/{name}"] = r
         report.add(f"compile_time/pb_{name}", us_per_call=r["wall_s"] * 1e6,
                    derived=f"nodes={r['nodes']}|evaluated={r['evaluated']}"
-                           f"|plan_ms={r['plan_s'] * 1e3:.3f}")
+                           f"|plan_ms={r['plan_s'] * 1e3:.3f}"
+                           f"|pre_dse_ms={r['pre_dse_s'] * 1e3:.3f}")
 
     out_dir = Path(os.environ.get("REPRO_BENCH_OUT_DIR", "."))
     out = out_dir / "BENCH_compile_time.json"
@@ -95,6 +106,12 @@ def run(report, archs=None, fast: bool = False) -> dict:
     except OSError as e:  # read-only CWD: keep the CSV rows, note the miss
         report.add("compile_time/json_write_failed", 0.0, derived=str(e))
     return results
+
+
+#: absolute growth below this many seconds never gates the pre-DSE check
+#: (the structural passes run in single-digit milliseconds; a 2x ratio of
+#: noise is still noise).
+PRE_DSE_MIN_DELTA_S = 0.05
 
 
 def compare(results: dict, baseline: dict, threshold: float,
@@ -110,20 +127,39 @@ def compare(results: dict, baseline: dict, threshold: float,
         new, old = results[arm], baseline[arm]
         ratio = new["wall_s"] / old["wall_s"] if old["wall_s"] else float("inf")
         # plan_s is reported (plan derivation is delta-projected and should
-        # stay in the low milliseconds) but only wall_s/total_s gate.
+        # stay in the low milliseconds) but only wall_s/pre_dse_s/total_s
+        # gate.
         plan = ""
         if "plan_s" in new:
             plan = (f", plan {old['plan_s']*1e3:.2f}ms -> " if "plan_s" in old
                     else ", plan ") + f"{new['plan_s']*1e3:.2f}ms"
+        pre = ""
+        if "pre_dse_s" in new:
+            pre = (f", pre-dse {old['pre_dse_s']*1e3:.2f}ms -> "
+                   if "pre_dse_s" in old else ", pre-dse ") \
+                  + f"{new['pre_dse_s']*1e3:.2f}ms"
         print(f"{arm}: wall {old['wall_s']:.3f}s -> {new['wall_s']:.3f}s "
               f"({ratio:.2f}x), qor {old['total_s']*1e3:.3f}ms -> "
-              f"{new['total_s']*1e3:.3f}ms{plan}")
+              f"{new['total_s']*1e3:.3f}ms{plan}{pre}")
         if (ratio > threshold
                 and new["wall_s"] - old["wall_s"] > min_delta_s):
             failures.append(
                 f"{arm}: optimize() wall-time {new['wall_s']:.3f}s is "
                 f"{ratio:.2f}x the baseline {old['wall_s']:.3f}s "
                 f"(threshold {threshold:.2f}x)")
+        # Total pre-DSE structural-pass time gates too: the transactional
+        # rewrite layer must not buy its invariants with compile time.
+        if "pre_dse_s" in new and "pre_dse_s" in old:
+            pre_ratio = (new["pre_dse_s"] / old["pre_dse_s"]
+                         if old["pre_dse_s"] else float("inf"))
+            if (pre_ratio > threshold
+                    and new["pre_dse_s"] - old["pre_dse_s"]
+                    > PRE_DSE_MIN_DELTA_S):
+                failures.append(
+                    f"{arm}: pre-DSE pass time {new['pre_dse_s']*1e3:.2f}ms "
+                    f"is {pre_ratio:.2f}x the baseline "
+                    f"{old['pre_dse_s']*1e3:.2f}ms (threshold "
+                    f"{threshold:.2f}x)")
         if new["total_s"] > old["total_s"] * (1 + qor_tolerance):
             failures.append(
                 f"{arm}: QoR regressed — estimated total_s "

@@ -7,17 +7,18 @@ from .estimator import (MULTI_POD, SINGLE_POD, MeshSpec, estimate,
 from .fusion import fuse_tasks
 from .graph import build_lm_graph
 from .incremental import IncrementalEstimator
-from .ir import (AccessMap, Buffer, Graph, MemoryEffect, Node, Op, Schedule,
-                 ScheduleTopology, Stream, TensorValue)
+from .ir import (AccessMap, Buffer, Graph, GraphTopology, MemoryEffect, Node,
+                 Op, Schedule, ScheduleTopology, Stream, TensorValue)
 from .lower import lower_to_structural
 from .multi_producer import eliminate_multi_producers
 from .optimize import OptimizeReport, optimize
 from .parallelize import parallelize
 from .plan import ShardingPlan, build_plan, project_rules, replicated_plan
+from .rewrite import GraphRewriteSession, RewriteError, ScheduleRewriteSession
 
 __all__ = [
-    "AccessMap", "Buffer", "Graph", "MemoryEffect", "Node", "Op",
-    "Schedule", "ScheduleTopology", "Stream", "TensorValue", "MeshSpec",
+    "AccessMap", "Buffer", "Graph", "GraphTopology", "MemoryEffect", "Node",
+    "Op", "Schedule", "ScheduleTopology", "Stream", "TensorValue", "MeshSpec",
     "SINGLE_POD",
     "MULTI_POD", "estimate", "IncrementalEstimator", "roofline_terms",
     "construct_functional",
@@ -25,4 +26,5 @@ __all__ = [
     "balance_paths", "parallelize", "ShardingPlan", "build_plan",
     "project_rules", "replicated_plan", "optimize", "OptimizeReport",
     "build_lm_graph",
+    "GraphRewriteSession", "ScheduleRewriteSession", "RewriteError",
 ]

@@ -19,13 +19,19 @@ Two mechanisms, chosen per buffer by a byte-budget heuristic:
    keep producer/consumer ordering elastic (no FSM — on TPU the rotation is
    a circular microbatch index and the tokens are data dependencies /
    optimization barriers for host-offload staging).
+
+The skew analysis reads the cached
+:class:`~repro.core.ir.ScheduleTopology` edges, and every mutation (copy
+nodes, duplicate buffers, consumer re-pointing, soft-FIFO attributes,
+token edges) flows through one transactional
+:class:`~repro.core.rewrite.ScheduleRewriteSession`.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from .ir import (Buffer, MemoryEffect, Node, Op, Schedule, TokenEdge,
-                 fresh_name)
+from .ir import Buffer, MemoryEffect, Node, Schedule, fresh_name
+from .rewrite import ScheduleRewriteSession, make_copy_op
 
 
 @dataclass
@@ -38,62 +44,67 @@ class BalanceStats:
 
 def path_skew(sched: Schedule) -> dict[tuple[str, str, str], int]:
     """Per (producer, consumer, buffer) edge: depth(consumer) - depth
-    (producer) - 1, i.e. how many pipeline levels the edge skips."""
+    (producer) - 1, i.e. how many pipeline levels the edge skips.  Both
+    the edge list and the depths come from the cached topology."""
     depth = sched.depth_of()
     return {(s, d, b): depth[d] - depth[s] - 1 for s, d, b in sched.edges()}
 
 
-def balance_paths(sched: Schedule, onchip_budget_bytes: int = 1 << 27
-                  ) -> BalanceStats:
+def balance_paths(sched: Schedule, onchip_budget_bytes: int = 1 << 27,
+                  selfcheck: bool = False) -> BalanceStats:
     stats = BalanceStats()
-    for (src, dst, bname), skew in sorted(path_skew(sched).items()):
-        if skew <= 0:
-            continue
-        stats.max_skew = max(stats.max_skew, skew)
-        buf = sched.buffers[bname]
-        dup_bytes = buf.bytes * skew
-        if dup_bytes <= onchip_budget_bytes:
-            _duplicate_chain(sched, src, dst, bname, skew, stats)
-        else:
-            _soft_fifo(sched, src, dst, bname, skew, stats)
+    with ScheduleRewriteSession(sched, selfcheck=selfcheck) as rs:
+        # The skew map is computed once against the pre-balance topology
+        # (inserting a copy node shifts downstream depths; re-deriving
+        # mid-pass would over-balance), straight off the session's edges.
+        depth = rs.depth_of()
+        skews = {(s, d, b): depth[d] - depth[s] - 1
+                 for s, d, b in rs.edges()}
+        for (src, dst, bname), skew in sorted(skews.items()):
+            if skew <= 0:
+                continue
+            stats.max_skew = max(stats.max_skew, skew)
+            buf = sched.buffers[bname]
+            dup_bytes = buf.bytes * skew
+            if dup_bytes <= onchip_budget_bytes:
+                _duplicate_chain(rs, src, dst, bname, skew, stats)
+            else:
+                _soft_fifo(rs, src, dst, bname, skew, stats)
     return stats
 
 
-def _duplicate_chain(sched: Schedule, src: str, dst: str, bname: str,
-                     skew: int, stats: BalanceStats) -> None:
+def _duplicate_chain(rs: ScheduleRewriteSession, src: str, dst: str,
+                     bname: str, skew: int, stats: BalanceStats) -> None:
     """Fig. 8(b): chain of copy nodes along the short path."""
+    sched = rs.sched
     base = sched.buffers[bname]
     cur = bname
     for level in range(skew):
         dup = fresh_name(f"{bname}_skid")
-        sched.buffers[dup] = Buffer(
+        rs.add_buffer(Buffer(
             name=dup, shape=base.shape, dtype=base.dtype, dims=base.dims,
-            stages=2, placement=base.placement)
-        from .multi_producer import make_copy_op
+            stages=2, placement=base.placement))
         copy_node = Node(
             name=fresh_name(f"balance_copy_{bname}"),
             args={cur: MemoryEffect.READ, dup: MemoryEffect.WRITE},
             body=[make_copy_op(base, cur, dup)])
         # Place right before the consumer so topo depth lands mid-path.
-        idx = sched.nodes.index(sched.node(dst))
-        sched.nodes.insert(idx, copy_node)
+        rs.add_node(copy_node, index=rs.position(sched.node(dst)))
         cur = dup
         stats.copy_nodes += 1
     consumer = sched.node(dst)
     # Consumer now reads the deepest duplicate.
-    from .multi_producer import _rename_in_node
-    _rename_in_node(consumer, bname, cur)
+    rs.rename_arg(consumer, bname, cur)
     stats.log.append(f"dup-chain {bname} x{skew} for {src}->{dst}")
 
 
-def _soft_fifo(sched: Schedule, src: str, dst: str, bname: str,
-               skew: int, stats: BalanceStats) -> None:
+def _soft_fifo(rs: ScheduleRewriteSession, src: str, dst: str,
+               bname: str, skew: int, stats: BalanceStats) -> None:
     """Fig. 8(c): rotate access into an external soft FIFO, ordering kept
     by explicit tokens (elastic node execution)."""
-    buf = sched.buffers[bname]
-    buf.stages = skew + 1
-    buf.placement = "external"
-    sched.tokens.append(TokenEdge(src=src, dst=dst))
+    rs.set_buffer_attrs(bname, stages=skew + 1, placement="external")
+    rs.add_token(src, dst)
     stats.soft_fifos += 1
     stats.log.append(
-        f"soft-fifo {bname} stages={buf.stages} token {src}->{dst}")
+        f"soft-fifo {bname} stages={rs.sched.buffers[bname].stages} "
+        f"token {src}->{dst}")

@@ -13,13 +13,21 @@ Two phases per ``dispatch`` region, processed top-down (pre-order):
 
 Finally the dispatch/task hierarchy is canonicalised (a task owning a
 single sub-task collapses, empty dispatches disappear).
+
+Every structural mutation flows through
+:class:`~repro.core.rewrite.GraphRewriteSession`: adjacency / cycle
+queries run against the session's per-dispatch successor graph (built
+once, maintained in O(Δ) per fusion), pattern matching reads the shared
+:class:`~repro.core.ir.GraphTopology` leaf-kind rollups, and the final
+hierarchy canonicalisation is a single transactional
+:meth:`~repro.core.rewrite.GraphRewriteSession.canonicalize`.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional
 
 from .ir import Graph, Op, make_task
+from .rewrite import GraphRewriteSession
 
 
 # --------------------------------------------------------------------------
@@ -46,6 +54,13 @@ class FusionPattern:
             return False
         return (p_leaves[-1].kind == self.producer
                 and all(o.kind in self.consumer for o in c_leaves))
+
+    def matches_meta(self, p_meta: tuple, c_meta: tuple) -> bool:
+        """:meth:`matches` over memoized ``GraphTopology.leaf_meta``
+        rollups ``(last leaf kind, frozenset of leaf kinds)`` — no region
+        re-walk per candidate pair."""
+        return (bool(c_meta[1]) and p_meta[0] == self.producer
+                and c_meta[1] <= self.consumer)
 
 
 def default_patterns() -> list[FusionPattern]:
@@ -79,104 +94,15 @@ def _consumes(t: Op) -> set[str]:
 
 
 def adjacent(a: Op, b: Op) -> bool:
-    """True when a feeds b or b feeds a through any value."""
+    """True when a feeds b or b feeds a through any value (standalone
+    form; the fusion phases use the session's maintained successor
+    graph)."""
     return bool(_produces(a) & _consumes(b)) or bool(_produces(b) & _consumes(a))
 
 
 def _ordered(a: Op, b: Op, tasks: list[Op]) -> tuple[Op, Op]:
     ia, ib = tasks.index(a), tasks.index(b)
     return (a, b) if ia <= ib else (b, a)
-
-
-class _RegionIndex:
-    """Memoized connectivity over one dispatch region.
-
-    A task's region is never mutated after creation (``_fuse_pair`` builds
-    a *new* merged task), so produces/consumes/intensity are cached per
-    task object.  The successor graph over the current task list is built
-    once per fusion step and shared by every adjacency / cycle query —
-    previously each ``_creates_cycle`` call rebuilt it from scratch, the
-    O(steps × pairs × n²) term that dominated ``optimize()`` wall time on
-    large graphs."""
-
-    def __init__(self) -> None:
-        self._prods: dict[int, set[str]] = {}
-        self._cons: dict[int, set[str]] = {}
-        self._intensity: dict[int, float] = {}
-        self._pins: list[Op] = []   # keep refs so id() keys stay unique
-        self._tasks: list[Op] = []
-        self._succ: list[set[int]] = []
-        self._pos: dict[int, int] = {}
-
-    def prods(self, t: Op) -> set[str]:
-        s = self._prods.get(id(t))
-        if s is None:
-            s = _produces(t)
-            self._prods[id(t)] = s
-            self._pins.append(t)
-        return s
-
-    def cons(self, t: Op) -> set[str]:
-        s = self._cons.get(id(t))
-        if s is None:
-            s = _consumes(t)
-            self._cons[id(t)] = s
-            self._pins.append(t)
-        return s
-
-    def intensity(self, t: Op) -> float:
-        v = self._intensity.get(id(t))
-        if v is None:
-            v = t.intensity()
-            self._intensity[id(t)] = v
-            self._pins.append(t)
-        return v
-
-    def rebuild(self, tasks: list[Op]) -> None:
-        """Recompute the successor graph for the current task list."""
-        self._tasks = list(tasks)
-        self._pos = {id(t): i for i, t in enumerate(self._tasks)}
-        prods = [self.prods(t) for t in self._tasks]
-        cons = [self.cons(t) for t in self._tasks]
-        n = len(self._tasks)
-        self._succ = [set() for _ in range(n)]
-        for i in range(n):
-            pi = prods[i]
-            for j in range(n):
-                if i != j and pi & cons[j]:
-                    self._succ[i].add(j)
-
-    def adjacent(self, a: Op, b: Op) -> bool:
-        ia, ib = self._pos[id(a)], self._pos[id(b)]
-        return ib in self._succ[ia] or ia in self._succ[ib]
-
-    def creates_cycle(self, a: Op, b: Op) -> bool:
-        """Fusing a and b is illegal when a third task sits on a dataflow
-        path between them (the merged task would both feed and consume it).
-        This matters for decode graphs: qkv → cache-update → attention must
-        not fuse qkv with attention around the cache-update node."""
-        ia, ib = self._pos[id(a)], self._pos[id(b)]
-        succ = self._succ
-        for src, dst in ((ia, ib), (ib, ia)):
-            seen: set[int] = set()
-            stack = [n for n in succ[src] if n != dst]
-            while stack:
-                n = stack.pop()
-                if n in seen:
-                    continue
-                seen.add(n)
-                if dst in succ[n]:
-                    return True
-                stack.extend(m for m in succ[n] if m != dst)
-        return False
-
-
-def _creates_cycle(tasks: list[Op], a: Op, b: Op) -> bool:
-    """Standalone form of :meth:`_RegionIndex.creates_cycle` (kept for
-    direct callers/tests; the fusion phases use the shared index)."""
-    idx = _RegionIndex()
-    idx.rebuild(tasks)
-    return idx.creates_cycle(a, b)
 
 
 # --------------------------------------------------------------------------
@@ -190,35 +116,23 @@ class FusionStats:
     log: list[str] = field(default_factory=list)
 
 
-def _fuse_pair(tasks: list[Op], a: Op, b: Op) -> Op:
-    """Fuse two tasks of one dispatch region into a new task, preserving
-    program order (transparent regions make this a pure re-wrap)."""
-    first, second = _ordered(a, b, tasks)
-    i = tasks.index(first)
-    merged = make_task(list(first.region) + list(second.region))
-    tasks[i] = merged
-    tasks.remove(second)
-    return merged
-
-
 def _pattern_phase(d: Op, patterns: list[FusionPattern],
-                   stats: FusionStats, idx: _RegionIndex) -> None:
+                   stats: FusionStats, rs: GraphRewriteSession) -> None:
     worklist = list(d.region)
-    idx.rebuild(d.region)
     while worklist:
         t = worklist.pop(0)
-        if t not in d.region:
-            continue
+        if not any(x is t for x in d.region):
+            continue    # already fused away
         for u in list(d.region):
-            if u is t or not idx.adjacent(t, u) or idx.creates_cycle(t, u):
+            if u is t or not rs.adjacent(d, t, u) or rs.creates_cycle(d, t, u):
                 continue
             p, c = _ordered(t, u, d.region)
-            if any(pat.matches(p, c) for pat in patterns):
-                merged = _fuse_pair(d.region, p, c)
+            pm, cm = rs.leaf_meta(p), rs.leaf_meta(c)
+            if any(pat.matches_meta(pm, cm) for pat in patterns):
+                merged = rs.fuse(d, p, c)
                 stats.pattern_fusions += 1
                 stats.log.append(f"pattern: {p.name}+{c.name}->{merged.name}")
                 worklist.append(merged)
-                idx.rebuild(d.region)
                 break
 
 
@@ -230,28 +144,27 @@ def _pattern_phase(d: Op, patterns: list[FusionPattern],
 LIGHT_FRACTION = 0.05
 
 
-def _balance_phase(d: Op, stats: FusionStats, idx: _RegionIndex,
+def _balance_phase(d: Op, stats: FusionStats, rs: GraphRewriteSession,
                    max_tasks: int | None = None) -> None:
     while len(d.region) > 1:
-        idx.rebuild(d.region)
-        crit = max(idx.intensity(t) for t in d.region)
+        crit = max(rs.intensity(t) for t in d.region)
         pairs = [(a, b) for i, a in enumerate(d.region)
                  for b in d.region[i + 1:]
-                 if idx.adjacent(a, b) and not idx.creates_cycle(a, b)]
+                 if rs.adjacent(d, a, b) and not rs.creates_cycle(d, a, b)]
         forced = max_tasks is not None and len(d.region) > max_tasks
         if not forced:
             pairs = [(a, b) for a, b in pairs
-                     if min(idx.intensity(a), idx.intensity(b))
+                     if min(rs.intensity(a), rs.intensity(b))
                      <= LIGHT_FRACTION * crit]
         if not pairs:
             break
         a, b = min(pairs,
-                   key=lambda p: idx.intensity(p[0]) + idx.intensity(p[1]))
-        fused_intensity = idx.intensity(a) + idx.intensity(b)
+                   key=lambda p: rs.intensity(p[0]) + rs.intensity(p[1]))
+        fused_intensity = rs.intensity(a) + rs.intensity(b)
         # Paper line 9: stop when fusing would create a new critical task.
         if fused_intensity > crit and not forced:
             break
-        merged = _fuse_pair(d.region, a, b)
+        merged = rs.fuse(d, a, b)
         stats.balance_fusions += 1
         stats.log.append(f"balance: {a.name}+{b.name}->{merged.name}")
 
@@ -270,7 +183,8 @@ def simplify_hierarchy(op: Op) -> Op:
 
 
 def fuse_tasks(graph: Graph, patterns: list[FusionPattern] | None = None,
-               max_tasks: int | None = None) -> FusionStats:
+               max_tasks: int | None = None,
+               selfcheck: bool = False) -> FusionStats:
     """Paper Algorithm 2 over every dispatch in pre-order (in place).
 
     Fewer, better-balanced tasks is what keeps the downstream DSE
@@ -279,6 +193,12 @@ def fuse_tasks(graph: Graph, patterns: list[FusionPattern] | None = None,
     the lowered schedule, so fusion here is the first half of the
     "hierarchy makes the DSE scale" claim.
 
+    The whole worklist runs inside one
+    :class:`~repro.core.rewrite.GraphRewriteSession` — on an exception the
+    graph rolls back to its pre-fusion structure, and on success the
+    maintained topology is committed so no downstream pass pays a
+    re-index.
+
     Args:
         graph: Functional graph whose dispatch regions get fused.
         patterns: profitable producer→consumer patterns (defaults to
@@ -286,16 +206,18 @@ def fuse_tasks(graph: Graph, patterns: list[FusionPattern] | None = None,
         max_tasks: when set, the balance phase keeps fusing (ignoring the
             light-task guard) until each dispatch has at most this many
             tasks — the escape valve for pathologically wide frontends.
+        selfcheck: assert the session's maintained topology against a
+            from-scratch rebuild after every rewrite (tests only).
 
     Returns:
         :class:`FusionStats` with per-phase fusion counts and a log.
     """
     patterns = patterns if patterns is not None else default_patterns()
     stats = FusionStats()
-    idx = _RegionIndex()
-    for op in list(graph.walk(pre=True)):
-        if op.kind == "dispatch":
-            _pattern_phase(op, patterns, stats, idx)
-            _balance_phase(op, stats, idx, max_tasks)
-    graph.ops = [simplify_hierarchy(o) for o in graph.ops]
+    with GraphRewriteSession(graph, selfcheck=selfcheck) as rs:
+        for op in list(graph.walk(pre=True)):
+            if op.kind == "dispatch":
+                _pattern_phase(op, patterns, stats, rs)
+                _balance_phase(op, stats, rs, max_tasks)
+        rs.canonicalize(simplify_hierarchy)
     return stats

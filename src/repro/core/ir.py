@@ -190,6 +190,18 @@ def fresh_name(prefix: str) -> str:
     return f"{prefix}_{next(_uid)}"
 
 
+def reset_fresh_names(start: int = 0) -> None:
+    """Reseed the global fresh-name counter (golden capture / tests only).
+
+    Generated names (``task_N``, ``copy_N``, ``x_dup_N`` …) embed a global
+    counter, so two runs of the same pipeline only produce identical IR
+    when both start from the same counter value.  The golden-invariance
+    sweep (``tests/test_rewrite.py``) resets before every build so the
+    serialized schedules and plans are reproducible bit-for-bit."""
+    global _uid
+    _uid = itertools.count(start)
+
+
 @dataclass
 class Op:
     """A primitive computation in the dataflow graph.
@@ -275,6 +287,130 @@ def make_dispatch(tasks: Sequence[Op], name: str | None = None) -> Op:
 # --------------------------------------------------------------------------
 
 @dataclass
+class GraphTopology:
+    """Value/hierarchy topology of a :class:`Graph` — the Functional-level
+    analogue of :class:`ScheduleTopology`, and the analysis substrate of
+    the pre-lowering passes (task fusion above all).
+
+    Holds the value→op indices (which leaf ops produce / consume each
+    tensor, in pre-order walk position), the task/dispatch hierarchy
+    (parent map), and lazily-memoized per-op rollups (transitive
+    produces/consumes sets, steady-state intensity, leaf-kind summaries
+    for pattern matching).  Everything depends only on the graph's
+    *structure* (op identities, region nesting, ins/outs, flops), so the
+    instance is cached on the graph (:meth:`Graph.topology`) against a
+    structure signature and survives until a pass restructures the
+    region tree.
+
+    Ops are keyed by ``id()``; every keyed op is pinned in ``_pins`` so
+    the ids stay unique for the topology's lifetime.  Mutation flows
+    exclusively through :class:`repro.core.rewrite.GraphRewriteSession`,
+    which maintains the indices in O(Δ) per rewrite and installs the
+    updated topology at commit."""
+
+    #: value name -> leaf ops producing / consuming it, in walk order
+    producers: dict[str, list[Op]]
+    consumers: dict[str, list[Op]]
+    #: id(op) -> enclosing region op (None for top-level ops)
+    parent: dict[int, Optional[Op]]
+    #: structure fingerprint this topology was built against
+    signature: tuple
+    # Lazy rollup memos (id-keyed; ops pinned below).  Merged tasks get
+    # their entries seeded by GraphRewriteSession.fuse in O(1) set ops.
+    _produces: dict[int, frozenset] = field(default_factory=dict)
+    _consumes: dict[int, frozenset] = field(default_factory=dict)
+    _intensity: dict[int, float] = field(default_factory=dict)
+    _leaf_meta: dict[int, tuple[Optional[str], frozenset]] = field(
+        default_factory=dict)
+    _pins: list = field(default_factory=list)
+
+    def _pin(self, op: Op) -> None:
+        self._pins.append(op)
+
+    def produces(self, op: Op) -> frozenset:
+        """Transitive outputs of ``op`` (region-aware), memoized."""
+        s = self._produces.get(id(op))
+        if s is None:
+            s = frozenset(op.all_outs())
+            self._produces[id(op)] = s
+            self._pin(op)
+        return s
+
+    def consumes(self, op: Op) -> frozenset:
+        """Transitive live-in values of ``op`` (region-aware), memoized."""
+        s = self._consumes.get(id(op))
+        if s is None:
+            s = frozenset(op.all_ins())
+            self._consumes[id(op)] = s
+            self._pin(op)
+        return s
+
+    def intensity(self, op: Op) -> float:
+        v = self._intensity.get(id(op))
+        if v is None:
+            v = op.intensity()
+            self._intensity[id(op)] = v
+            self._pin(op)
+        return v
+
+    def leaf_meta(self, op: Op) -> tuple[Optional[str], frozenset]:
+        """``(last leaf kind, set of leaf kinds)`` — what the fusion
+        patterns match on, without re-walking the region per candidate."""
+        m = self._leaf_meta.get(id(op))
+        if m is None:
+            kinds = [o.kind for o in op.walk() if not o.has_region]
+            m = (kinds[-1] if kinds else None, frozenset(kinds))
+            self._leaf_meta[id(op)] = m
+            self._pin(op)
+        return m
+
+    def parent_of(self, op: Op) -> Optional[Op]:
+        return self.parent.get(id(op))
+
+    def note_fusion(self, merged: Op, first: Op, second: Op) -> None:
+        """Seed the rollup memos for a task fused from ``first`` +
+        ``second`` (region order preserved) — O(1) set algebra instead of
+        a region re-walk.  ``consumes`` excludes values ``second`` reads
+        that ``first`` already produced (they became region-internal).
+        Intensity is the one rollup recomputed by walking ``merged``:
+        float addition is not associative, so summing the two memoized
+        partials could drift an ulp from the sequential region walk and
+        flip a tied least-critical fusion choice."""
+        pf, ps = self.produces(first), self.produces(second)
+        cf, cs = self.consumes(first), self.consumes(second)
+        lf, ls = self.leaf_meta(first), self.leaf_meta(second)
+        self._produces[id(merged)] = pf | ps
+        self._consumes[id(merged)] = cf | (cs - pf)
+        self._intensity[id(merged)] = merged.intensity()
+        self._leaf_meta[id(merged)] = (ls[0] if ls[0] is not None else lf[0],
+                                       lf[1] | ls[1])
+        self._pin(merged)
+
+    @classmethod
+    def build(cls, graph: "Graph") -> "GraphTopology":
+        producers: dict[str, list[Op]] = {}
+        consumers: dict[str, list[Op]] = {}
+        parent: dict[int, Optional[Op]] = {}
+        pins: list = []
+
+        def visit(op: Op, par: Optional[Op]) -> None:
+            parent[id(op)] = par
+            pins.append(op)
+            if not op.has_region:
+                for v in op.outs:
+                    producers.setdefault(v, []).append(op)
+                for v in op.ins:
+                    consumers.setdefault(v, []).append(op)
+            for c in op.region:
+                visit(c, op)
+
+        for top in graph.ops:
+            visit(top, None)
+        return cls(producers=producers, consumers=consumers, parent=parent,
+                   signature=graph.structure_signature(), _pins=pins)
+
+
+@dataclass
 class Graph:
     """Top-level Functional dataflow module (transparent global context)."""
 
@@ -283,6 +419,9 @@ class Graph:
     ops: list[Op] = field(default_factory=list)
     inputs: list[str] = field(default_factory=list)
     outputs: list[str] = field(default_factory=list)
+    # Cached GraphTopology (see topology()); never compared/printed.
+    _topology: Optional[GraphTopology] = field(
+        default=None, repr=False, compare=False)
 
     # -- builder interface --------------------------------------------------
     def tensor(self, name: str, shape: Sequence[int], dtype: str = "bf16",
@@ -330,13 +469,36 @@ class Graph:
         return [o for o in self.walk() if not o.has_region]
 
     def producers(self, value: str) -> list[Op]:
-        return [o for o in self.leaf_ops() if value in o.outs]
+        return list(self.topology().producers.get(value, ()))
 
     def consumers(self, value: str) -> list[Op]:
-        return [o for o in self.leaf_ops() if value in o.ins]
+        return list(self.topology().consumers.get(value, ()))
 
     def total_flops(self) -> int:
         return sum(o.flops for o in self.leaf_ops())
+
+    # -- shared topology cache ------------------------------------------------
+    def structure_signature(self) -> tuple:
+        """Fingerprint of everything :class:`GraphTopology` depends on:
+        op identities, region structure (a fused task changes region
+        lengths), value ins/outs, and the intensity inputs (flops,
+        repeat)."""
+        return tuple(
+            (o.name, o.kind, len(o.region), tuple(o.ins), tuple(o.outs),
+             o.flops, o.repeat)
+            for o in self.walk())
+
+    def topology(self) -> GraphTopology:
+        """The cached :class:`GraphTopology`, rebuilt transparently when
+        the structure signature no longer matches (e.g. after
+        ``construct_functional`` re-wrapped the region tree)."""
+        if (self._topology is None
+                or self._topology.signature != self.structure_signature()):
+            self._topology = GraphTopology.build(self)
+        return self._topology
+
+    def invalidate_topology(self) -> None:
+        self._topology = None
 
 
 # --------------------------------------------------------------------------
@@ -393,6 +555,50 @@ class Node:
             if value in o.access:
                 return o.access[value]
         return None
+
+
+def topo_order_over(nodes: Sequence["Node"],
+                    edges: Iterable[tuple[str, str, str]],
+                    name: str = "") -> list["Node"]:
+    """Stable topological order of ``nodes`` over ``edges`` — the shared
+    walk behind :meth:`Schedule.topo_order` and the rewrite session's
+    in-flight queries (which run it over Δ-maintained edges instead of
+    rebuilding the schedule topology)."""
+    succ: dict[str, set[str]] = {n.name: set() for n in nodes}
+    indeg: dict[str, int] = {n.name: 0 for n in nodes}
+    for s, d, _ in edges:
+        if d not in succ[s]:
+            succ[s].add(d)
+            indeg[d] += 1
+    order: list[Node] = []
+    ready = [n for n in nodes if indeg[n.name] == 0]
+    while ready:
+        n = ready.pop(0)
+        order.append(n)
+        for m in nodes:
+            if m.name in succ[n.name]:
+                indeg[m.name] -= 1
+                if indeg[m.name] == 0:
+                    ready.append(m)
+    if len(order) != len(nodes):
+        raise ValueError(f"schedule {name} has a dataflow cycle")
+    return order
+
+
+def depth_map_over(nodes: Sequence["Node"],
+                   edges: Iterable[tuple[str, str, str]],
+                   name: str = "") -> dict[str, int]:
+    """Longest-path depth per node over ``edges`` (see
+    :func:`topo_order_over`)."""
+    edges = list(edges)
+    depth = {n.name: 0 for n in nodes}
+    succ: dict[str, list[str]] = {n.name: [] for n in nodes}
+    for s, d, _ in edges:
+        succ[s].append(d)
+    for n in topo_order_over(nodes, edges, name):
+        for d in succ[n.name]:
+            depth[d] = max(depth[d], depth[n.name] + 1)
+    return depth
 
 
 @dataclass
@@ -561,10 +767,12 @@ class Schedule:
         return buf in self.buffers and buf not in self.args
 
     def producers_of(self, buf: str) -> list[Node]:
-        return [n for n in self.nodes if buf in n.writes()]
+        """Nodes writing ``buf``, in node order (topology-served)."""
+        return list(self.topology().producers.get(buf, ()))
 
     def consumers_of(self, buf: str) -> list[Node]:
-        return [n for n in self.nodes if buf in n.reads()]
+        """Nodes reading ``buf``, in node order (topology-served)."""
+        return list(self.topology().consumers.get(buf, ()))
 
     def internal_buffers(self) -> list[str]:
         return [b for b in self.buffers if self.is_internal(b)]
@@ -584,33 +792,70 @@ class Schedule:
     def topo_order(self) -> list[Node]:
         """Topological order over buffer edges (stable; raises on cycles
         between distinct nodes, ignoring self-loops from RW args)."""
-        succ: dict[str, set[str]] = {n.name: set() for n in self.nodes}
-        indeg: dict[str, int] = {n.name: 0 for n in self.nodes}
-        for s, d, _ in self.edges():
-            if d not in succ[s]:
-                succ[s].add(d)
-                indeg[d] += 1
-        order: list[Node] = []
-        ready = [n for n in self.nodes if indeg[n.name] == 0]
-        while ready:
-            n = ready.pop(0)
-            order.append(n)
-            for m in self.nodes:
-                if m.name in succ[n.name]:
-                    indeg[m.name] -= 1
-                    if indeg[m.name] == 0:
-                        ready.append(m)
-        if len(order) != len(self.nodes):
-            raise ValueError(f"schedule {self.name} has a dataflow cycle")
-        return order
+        return topo_order_over(self.nodes, self.edges(), self.name)
 
     def depth_of(self) -> dict[str, int]:
         """Longest-path depth per node (for data-path balancing)."""
-        depth = {n.name: 0 for n in self.nodes}
-        succ: dict[str, list[str]] = {n.name: [] for n in self.nodes}
-        for s, d, _ in self.edges():
-            succ[s].append(d)
-        for n in self.topo_order():
-            for d in succ[n.name]:
-                depth[d] = max(depth[d], depth[n.name] + 1)
-        return depth
+        return depth_map_over(self.nodes, self.edges(), self.name)
+
+    # -- serialisation --------------------------------------------------------
+    def to_dict(self) -> dict:
+        """Complete, deterministic structural dump — node order, buffer
+        order, argument effects, body ops with access maps, balancing
+        tokens and parallelization state all included.  Two schedules are
+        structurally identical iff their dicts (and hence ``to_json``
+        strings) are equal; the golden-invariance sweep in
+        ``tests/test_rewrite.py`` pins the whole pre-DSE pipeline on it."""
+        def am(m: AccessMap) -> list:
+            return [[d, str(s)] for d, s in m.entries]
+
+        def op_d(o: Op) -> dict:
+            return {
+                "name": o.name, "kind": o.kind, "ins": list(o.ins),
+                "outs": list(o.outs), "loop_dims": dict(o.loop_dims),
+                "flops": o.flops, "repeat": o.repeat,
+                "access": {v: am(m) for v, m in o.access.items()},
+                "attrs": {k: repr(v) for k, v in sorted(o.attrs.items())},
+                "region": [op_d(c) for c in o.region],
+            }
+
+        def node_d(n: Node) -> dict:
+            return {
+                "name": n.name, "args": dict(n.args), "stage": n.stage,
+                "params": {k: repr(v) for k, v in sorted(n.params.items())},
+                "unroll": dict(n.unroll),
+                "axis_map": {d: list(a) for d, a in n.axis_map.items()},
+                "body": [op_d(o) for o in n.body],
+                "sub_schedule": (n.sub_schedule.to_dict()
+                                 if n.sub_schedule is not None else None),
+            }
+
+        def buf_d(b: Buffer) -> dict:
+            return {
+                "name": b.name, "shape": list(b.shape), "dtype": b.dtype,
+                "dims": list(b.dims), "stages": b.stages,
+                "partition": [[k, f] for k, f in b.partition],
+                "tiling": list(b.tiling), "placement": b.placement,
+                "is_weight": b.is_weight,
+                "spec": ([list(a) for a in b.spec]
+                         if b.spec is not None else None),
+            }
+
+        return {
+            "name": self.name,
+            "args": list(self.args),
+            "outputs": list(self.outputs),
+            "nodes": [node_d(n) for n in self.nodes],
+            "buffers": {b: buf_d(buf) for b, buf in self.buffers.items()},
+            "streams": {s: {"name": st.name,
+                            "elem_shape": list(st.elem_shape),
+                            "dtype": st.dtype, "entries": st.entries,
+                            "is_token": st.is_token}
+                        for s, st in self.streams.items()},
+            "tokens": [[t.src, t.dst] for t in self.tokens],
+            "value_bytes": dict(self.value_bytes),
+        }
+
+    def to_json(self) -> str:
+        import json
+        return json.dumps(self.to_dict(), indent=1)

@@ -13,11 +13,18 @@ Three procedures:
 Values produced *and* consumed entirely inside one task stay node-internal
 (they never materialise as schedule buffers — on TPU they live in registers
 / VMEM inside the fused XLA computation).
+
+The schedule is assembled through a
+:class:`~repro.core.rewrite.ScheduleRewriteSession` (``add_node`` /
+``add_buffer`` / ``drop_arg`` / ``set_outputs``), whose commit installs
+the Δ-maintained :class:`~repro.core.ir.ScheduleTopology` — the
+downstream passes and the DSE start on a warm topology cache instead of
+paying the first full index build.
 """
 from __future__ import annotations
 
-from .ir import (Buffer, Graph, MemoryEffect, Node, Op, Schedule,
-                 TensorValue)
+from .ir import Buffer, Graph, MemoryEffect, Node, Op, Schedule
+from .rewrite import ScheduleRewriteSession
 
 
 def _node_effects(task: Op) -> dict[str, str]:
@@ -50,8 +57,13 @@ def _leaf_body(task: Op) -> list[Op]:
     return [o for o in task.walk() if not o.has_region]
 
 
-def lower_to_structural(graph: Graph, name: str | None = None) -> Schedule:
-    """Lower the (fused) Functional dataflow to a Structural schedule."""
+def lower_to_structural(graph: Graph, name: str | None = None,
+                        selfcheck: bool = False) -> Schedule:
+    """Lower the (fused) Functional dataflow to a Structural schedule.
+
+    ``selfcheck`` asserts the session's maintained topology against a
+    from-scratch build after every rewrite (tests only); it propagates
+    to recursively-lowered sub-schedules."""
     # The top level is a single dispatch after construction+fusion; tolerate
     # a bare op list for tiny graphs (no dataflow opportunity).
     if len(graph.ops) == 1 and graph.ops[0].kind == "dispatch":
@@ -60,44 +72,42 @@ def lower_to_structural(graph: Graph, name: str | None = None) -> Schedule:
         tasks = graph.ops
 
     sched = Schedule(name=name or f"{graph.name}_sched")
+    with ScheduleRewriteSession(sched, selfcheck=selfcheck) as rs:
+        for t in tasks:
+            effects = _node_effects(t)
+            sub = None
+            inner_dispatches = [c for c in t.region if c.kind == "dispatch"]
+            if inner_dispatches:
+                # Recursive nesting: lower the inner dispatch to a
+                # sub-schedule (with its own session).
+                inner_graph = Graph(name=f"{t.name}_inner",
+                                    values=graph.values,
+                                    ops=[inner_dispatches[0]])
+                sub = lower_to_structural(inner_graph, name=f"{t.name}_sub",
+                                          selfcheck=selfcheck)
+            rs.add_node(Node(name=t.name, args=effects, body=_leaf_body(t),
+                             sub_schedule=sub))
+        nodes = sched.nodes
 
-    nodes: list[Node] = []
-    for t in tasks:
-        effects = _node_effects(t)
-        sub = None
-        inner_dispatches = [c for c in t.region if c.kind == "dispatch"]
-        if inner_dispatches:
-            # Recursive nesting: lower the inner dispatch to a sub-schedule.
-            inner_graph = Graph(name=f"{t.name}_inner", values=graph.values,
-                                ops=[inner_dispatches[0]])
-            sub = lower_to_structural(inner_graph, name=f"{t.name}_sub")
-        node = Node(name=t.name, args=effects, body=_leaf_body(t),
-                    sub_schedule=sub)
-        nodes.append(node)
-    sched.nodes = nodes
+        # -- buffer generation: values crossing node boundaries ------------
+        touched_by: dict[str, set[str]] = {}
+        for n in nodes:
+            for v in n.args:
+                touched_by.setdefault(v, set()).add(n.name)
 
-    # -- buffer generation: values crossing node boundaries ----------------
-    touched_by: dict[str, set[str]] = {}
-    written_by: dict[str, set[str]] = {}
-    for n in nodes:
-        for v in n.args:
-            touched_by.setdefault(v, set()).add(n.name)
-        for v in n.writes():
-            written_by.setdefault(v, set()).add(n.name)
-
-    graph_io = set(graph.inputs) | set(graph.outputs)
-    for vname, users in touched_by.items():
-        crossing = len(users) > 1 or vname in graph_io
-        if not crossing:
-            # Node-internal temporary: drop from the node arg list.
-            for n in nodes:
-                n.args.pop(vname, None)
-            continue
-        t = graph.values[vname]
-        placement = "hbm"
-        sched.buffers[vname] = Buffer.from_tensor(t, placement=placement)
-        if vname in graph_io or t.is_weight:
-            sched.args.append(vname)
-    sched.outputs = [v for v in graph.outputs if v in sched.buffers]
-    sched.value_bytes = {v: t.bytes for v, t in graph.values.items()}
+        graph_io = set(graph.inputs) | set(graph.outputs)
+        for vname, users in touched_by.items():
+            crossing = len(users) > 1 or vname in graph_io
+            if not crossing:
+                # Node-internal temporary: drop from the node arg list.
+                for n in nodes:
+                    if vname in n.args:
+                        rs.drop_arg(n, vname)
+                continue
+            t = graph.values[vname]
+            external = vname in graph_io or t.is_weight
+            rs.add_buffer(Buffer.from_tensor(t, placement="hbm"),
+                          external=external)
+        rs.set_outputs([v for v in graph.outputs if v in sched.buffers])
+        rs.set_value_bytes({v: t.bytes for v, t in graph.values.items()})
     return sched

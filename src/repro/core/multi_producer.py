@@ -18,12 +18,23 @@ On TPU this pass is what legalises multi-writer streams — KV-cache slot
 updates, residual-stream accumulators, microbatch gradient accumulators —
 into SSA-friendly single-writer buffers that XLA can donate/alias, instead
 of forcing a serialised schedule.
+
+All mutation flows through
+:class:`~repro.core.rewrite.ScheduleRewriteSession`: producer lists and
+dominated-use sets come from the session's Δ-maintained indices (no
+per-buffer node scans), buffer duplication / use re-pointing / copy
+insertion / producer fusion are session primitives, and the whole pass is
+one transaction — an exception rolls the schedule back to its pre-pass
+state.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
-from .ir import Buffer, MemoryEffect, Node, Op, Schedule, fresh_name
+from .ir import Buffer, MemoryEffect, Node, Schedule, fresh_name
+from .rewrite import ScheduleRewriteSession, make_copy_op
+
+__all__ = ["MultiProducerStats", "eliminate_multi_producers", "make_copy_op"]
 
 
 @dataclass
@@ -34,76 +45,53 @@ class MultiProducerStats:
     log: list[str] = field(default_factory=list)
 
 
-def _rename_in_node(n: Node, old: str, new: str) -> None:
-    if old in n.args:
-        n.args[new] = n.args.pop(old)
-    for o in n.body:
-        o.ins = [new if v == old else v for v in o.ins]
-        o.outs = [new if v == old else v for v in o.outs]
-        if old in o.access:
-            o.access[new] = o.access.pop(old)
-
-
-def make_copy_op(buf: Buffer, src: str, dst: str) -> Op:
-    """An explicit memory copy over the buffer's full index space — the
-    copy iterates every axis, so it is shardable like any other node."""
-    from .ir import AccessMap
-    loop = {d: s for d, s in zip(buf.dims, buf.shape)}
-    am = AccessMap.identity(buf.dims)
-    return Op(name=fresh_name("copy"), kind="copy", ins=[src], outs=[dst],
-              loop_dims=loop, access={src: am, dst: am})
-
-
-def _insert_copy(n: Node, buf: Buffer, src: str, dst: str) -> None:
-    """Prepend an explicit memory copy ``src -> dst`` to node ``n``
-    (paper Alg. 3 lines 5-7)."""
-    n.body.insert(0, make_copy_op(buf, src, dst))
-    n.args[src] = MemoryEffect.READ
-
-
-def eliminate_multi_producers(sched: Schedule) -> MultiProducerStats:
+def eliminate_multi_producers(sched: Schedule,
+                              selfcheck: bool = False) -> MultiProducerStats:
     stats = MultiProducerStats()
+    with ScheduleRewriteSession(sched, selfcheck=selfcheck) as rs:
+        _eliminate(sched, rs, stats)
+    return stats
+
+
+def _eliminate(sched: Schedule, rs: ScheduleRewriteSession,
+               stats: MultiProducerStats) -> None:
     # Paper: producers sorted by SSA dominance — i.e. program order, not
     # buffer-dataflow order (an RW node dominates a later W node even
     # though the buffer edge points the other way).
-    order = {n.name: i for i, n in enumerate(sched.nodes)}
-
-    def dominates(a: Node, b: Node) -> bool:
-        return order[a.name] <= order[b.name]
 
     # -- case (1): internal buffers → duplication ---------------------------
     for bname in list(sched.internal_buffers()):
-        producers = sorted(sched.producers_of(bname),
-                           key=lambda n: order[n.name])
+        producers = sorted(rs.producers(bname), key=rs.position)
         if len(producers) <= 1:
             continue
         cur = bname
         for p in producers[1:]:
             base = sched.buffers[bname]
             dup_name = fresh_name(f"{bname}_dup")
-            sched.buffers[dup_name] = Buffer(
+            rs.add_buffer(Buffer(
                 name=dup_name, shape=base.shape, dtype=base.dtype,
                 dims=base.dims, stages=base.stages, partition=base.partition,
-                tiling=base.tiling, placement=base.placement)
+                tiling=base.tiling, placement=base.placement))
             stats.duplicated += 1
             reads_prev = p.args.get(cur) in (MemoryEffect.READ,
                                              MemoryEffect.READ_WRITE)
             # Re-point every use dominated by p (including p itself).
-            for u in sched.nodes:
-                if cur in u.args and dominates(p, u):
-                    _rename_in_node(u, cur, dup_name)
+            rs.replace_uses(cur, dup_name,
+                            [u for u in rs.users_in_program_order(cur)
+                             if rs.position(p) <= rs.position(u)])
             if reads_prev:
-                _insert_copy(p, sched.buffers[dup_name], cur, dup_name)
+                rs.insert_copy(p, sched.buffers[dup_name], cur, dup_name)
                 stats.copies += 1
             stats.log.append(f"dup {cur}->{dup_name} for producer {p.name}")
             cur = dup_name
 
     # -- case (2): external buffers → producer fusion -----------------------
     for bname in list(sched.external_buffers()):
-        producers = sorted(sched.producers_of(bname),
-                           key=lambda n: order[n.name])
+        producers = sorted(rs.producers(bname), key=rs.position)
         if len(producers) <= 1:
             continue
+        # Body concatenation and effect merging are pass policy; the
+        # session owns the structural swap (retire olds + insert merged).
         merged = Node(name=fresh_name("merged_node"))
         for p in producers:
             merged.body.extend(p.body)
@@ -113,12 +101,9 @@ def eliminate_multi_producers(sched: Schedule) -> MultiProducerStats:
                     merged.args[v] = e
                 elif prev != e:
                     merged.args[v] = MemoryEffect.READ_WRITE
-        first_idx = min(sched.nodes.index(p) for p in producers)
-        for p in producers:
-            sched.nodes.remove(p)
-        sched.nodes.insert(first_idx, merged)
+        first_idx = min(rs.position(p) for p in producers)
+        rs.replace_nodes(producers, merged, first_idx)
         stats.merged += len(producers)
         stats.log.append(
             f"merged producers {[p.name for p in producers]} of {bname} "
             f"-> {merged.name}")
-    return stats

@@ -37,7 +37,20 @@ class OptimizeReport:
     #: wall time of plan derivation (build_plan + EP widening + role
     #: aliasing) — tracked by benchmarks/bench_compile_time.py.
     plan_time_s: float = 0.0
+    #: per-pass wall time of the pre-DSE pipeline (all four passes run on
+    #: the transactional rewrite substrate; benchmarks/bench_compile_time
+    #: gates their total so a topology-maintenance regression is caught
+    #: the same way a DSE regression is).
+    fuse_s: float = 0.0
+    lower_s: float = 0.0
+    mp_s: float = 0.0
+    balance_s: float = 0.0
     meta: dict = field(default_factory=dict)
+
+    @property
+    def pre_dse_s(self) -> float:
+        """Total pre-DSE structural-pass wall time."""
+        return self.fuse_s + self.lower_s + self.mp_s + self.balance_s
 
 
 def optimize(graph: Graph, mesh: MeshSpec, *,
@@ -81,10 +94,18 @@ def optimize(graph: Graph, mesh: MeshSpec, *,
 
     construct_functional(graph)
     if fuse:
+        t = time.perf_counter()
         report.fusion = fuse_tasks(graph)
+        report.fuse_s = time.perf_counter() - t
+    t = time.perf_counter()
     sched = lower_to_structural(graph)
+    report.lower_s = time.perf_counter() - t
+    t = time.perf_counter()
     report.multi_producer = eliminate_multi_producers(sched)
+    report.mp_s = time.perf_counter() - t
+    t = time.perf_counter()
     report.balance = balance_paths(sched)
+    report.balance_s = time.perf_counter() - t
     report.parallelize = parallelize(
         sched, mesh, ia=ia, ca=ca, training=training,
         max_parallel_factor=max_parallel_factor,

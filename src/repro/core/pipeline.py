@@ -29,9 +29,11 @@ from jax.sharding import Mesh, PartitionSpec as P
 from .ir import Schedule
 
 
-def assign_stages(sched: Schedule, n_stages: int) -> dict[str, int]:
-    """Balance HIDA nodes across pipeline stages by intensity (the
-    critical-node II is what the paper's fusion pass already minimised)."""
+def compute_stages(sched: Schedule, n_stages: int) -> dict[str, int]:
+    """Pure stage analysis: balance HIDA nodes across pipeline stages by
+    intensity (the critical-node II is what the paper's fusion pass
+    already minimised).  Returns ``node name -> stage`` without touching
+    the schedule — apply with :func:`apply_stages`."""
     order = sched.topo_order()
     total = sum(n.intensity() for n in order) or 1
     target = total / n_stages
@@ -39,11 +41,33 @@ def assign_stages(sched: Schedule, n_stages: int) -> dict[str, int]:
     out: dict[str, int] = {}
     for n in order:
         out[n.name] = stage
-        n.stage = stage
         acc += n.intensity()
         if acc >= target * (stage + 1) and stage < n_stages - 1:
             stage += 1
     return out
+
+
+def apply_stages(sched: Schedule, stages: dict[str, int]) -> None:
+    """Write a stage mapping onto the schedule through one transactional
+    :class:`~repro.core.rewrite.ScheduleRewriteSession` — either every
+    node's ``stage`` is updated or (on error) none is, so callers can
+    never observe a half-applied mapping."""
+    from .rewrite import ScheduleRewriteSession
+    with ScheduleRewriteSession(sched) as rs:
+        for name, stage in stages.items():
+            rs.set_stage(sched.node(name), stage)
+
+
+def assign_stages(sched: Schedule, n_stages: int) -> dict[str, int]:
+    """:func:`compute_stages` + :func:`apply_stages` in one step.
+
+    Unlike the old implementation (which mutated ``n.stage`` node by node
+    *while* computing the mapping, so an exception mid-walk left the
+    schedule half-staged), the mutation is an explicit all-or-nothing
+    rewrite applied only after the analysis completes."""
+    stages = compute_stages(sched, n_stages)
+    apply_stages(sched, stages)
+    return stages
 
 
 @dataclass

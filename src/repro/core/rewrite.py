@@ -1,0 +1,970 @@
+"""Transactional rewrite layer: every structural mutation of the
+Functional graph and the Structural schedule flows through a session.
+
+HIDA's optimizer is hierarchical precisely because every pass — task
+fusion (Alg. 2), multi-producer elimination (Alg. 3), data-path balancing
+(Section 6.4.2), Functional→Structural lowering (Section 6.3) — reasons
+over the *same* dataflow structure.  Before this layer, each pass kept
+its own ad-hoc producer/consumer scans and mutated ``Graph`` /
+``Schedule`` raw, leaving ``Schedule.topology()`` to detect the damage by
+signature mismatch and re-index from scratch.  Now:
+
+* :class:`GraphRewriteSession` wraps a :class:`~repro.core.ir.Graph` and
+  owns the fusion-facing view of :class:`~repro.core.ir.GraphTopology`:
+  per-dispatch successor graphs, task rollups (produces / consumes /
+  intensity / leaf kinds), cycle queries — maintained in **O(Δ)** per
+  :meth:`~GraphRewriteSession.fuse` / :meth:`~GraphRewriteSession.split`
+  (one region scan, not a quadratic rebuild per worklist step).
+
+* :class:`ScheduleRewriteSession` wraps a
+  :class:`~repro.core.ir.Schedule` and maintains the producer/consumer
+  indices of :class:`~repro.core.ir.ScheduleTopology` across its
+  primitives (``add_node`` / ``retire_node`` / ``replace_nodes`` /
+  ``rename_arg`` / ``rename_buffer`` / ``insert_copy`` / ``set_arg`` /
+  ``drop_arg`` / buffer and token edits).  Derived per-buffer structures
+  (axis dims, the edge list, the dim→buffer inverted index) are
+  invalidated per *touched buffer* and regenerated only for those buffers
+  at :meth:`~ScheduleRewriteSession.commit` — untouched buffers reuse the
+  pre-session topology's entries verbatim.
+
+Both sessions are **transactions**, mirroring
+:class:`~repro.core.incremental.IncrementalEstimator`'s
+propose/commit/rollback:
+
+* ``commit()`` installs the maintained topology into the owner's cache
+  (``graph._topology`` / ``sched._topology``) with a fresh structure
+  signature, so the next ``topology()`` call is a cache *hit* — no pass
+  boundary pays a re-index.
+* ``rollback()`` undoes every IR mutation (each primitive logs an exact
+  inverse) and reinstates the untouched pre-session topology object.
+* Used as a context manager, exit commits on success and rolls back on
+  exception — a pass can never leave the IR half-rewritten.
+
+``tests/test_rewrite.py`` property-checks the whole contract: after any
+prefix of a pass's rewrite trace, the maintained topology fingerprint
+equals a from-scratch ``build()``, and rollback restores the pre-session
+schedule and topology bit-exactly.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Optional, Sequence
+
+from .ir import (AccessMap, Buffer, Graph, GraphTopology, MemoryEffect, Node,
+                 Op, Schedule, ScheduleTopology, TokenEdge, depth_map_over,
+                 fresh_name, make_task, topo_order_over)
+
+
+class RewriteError(RuntimeError):
+    """Misuse of a rewrite session (closed session, duplicate buffer,
+    canonicalized graph rolled back, …)."""
+
+
+def _remove_identical(lst: list, obj) -> bool:
+    """Remove ``obj`` from ``lst`` by identity (dataclass ``==`` is deep
+    and could match a distinct object)."""
+    for i, x in enumerate(lst):
+        if x is obj:
+            del lst[i]
+            return True
+    return False
+
+
+def _index_identical(lst: list, obj) -> int:
+    """``lst.index(obj)`` by identity (see :func:`_remove_identical`)."""
+    for i, x in enumerate(lst):
+        if x is obj:
+            return i
+    raise ValueError(f"{getattr(obj, 'name', obj)!r} not in list")
+
+
+def make_copy_op(buf: Buffer, src: str, dst: str) -> Op:
+    """An explicit memory copy over the buffer's full index space — the
+    copy iterates every axis, so it is shardable like any other node."""
+    loop = {d: s for d, s in zip(buf.dims, buf.shape)}
+    am = AccessMap.identity(buf.dims)
+    return Op(name=fresh_name("copy"), kind="copy", ins=[src], outs=[dst],
+              loop_dims=loop, access={src: am, dst: am})
+
+
+# --------------------------------------------------------------------------
+# Topology fingerprints (property tests + selfcheck mode)
+# --------------------------------------------------------------------------
+
+def schedule_topology_fingerprint(topo: ScheduleTopology) -> dict:
+    """Name-based semantic content of a :class:`ScheduleTopology` — two
+    topologies describe the same structure iff their fingerprints are
+    equal (the lazy ``_access`` cache is deliberately excluded)."""
+    return {
+        "producers": {b: [n.name for n in v]
+                      for b, v in topo.producers.items() if v},
+        "consumers": {b: [n.name for n in v]
+                      for b, v in topo.consumers.items() if v},
+        "edges": list(topo.edges),
+        "axis_owner_dims": {
+            b: tuple(tuple((n.name, d) for n, d in pairs) for pairs in per)
+            for b, per in topo.axis_owner_dims.items()},
+        "axis_dims": dict(topo.axis_dims),
+        "buffers_of_dim": dict(topo.buffers_of_dim),
+        "signature": topo.signature,
+    }
+
+
+def graph_topology_fingerprint(topo: GraphTopology, graph: Graph) -> dict:
+    """Name-based semantic content of a :class:`GraphTopology` restricted
+    to ops currently reachable from ``graph`` (rollup memos are lazy
+    caches and excluded; parent entries for retired ops are ignored)."""
+    live = {id(o): o.name for o in graph.walk()}
+    return {
+        "producers": {v: [o.name for o in ops]
+                      for v, ops in topo.producers.items() if ops},
+        "consumers": {v: [o.name for o in ops]
+                      for v, ops in topo.consumers.items() if ops},
+        "parent": {name: (topo.parent.get(i).name
+                          if topo.parent.get(i) is not None else None)
+                   for i, name in live.items()},
+        "signature": topo.signature,
+    }
+
+
+# --------------------------------------------------------------------------
+# Functional-level session
+# --------------------------------------------------------------------------
+
+class GraphRewriteSession:
+    """Transactional rewrites over a Functional :class:`Graph`.
+
+    The fusion pass (Alg. 2) drives its whole worklist through this:
+    adjacency / cycle queries against a per-dispatch successor graph that
+    is built once per dispatch and then **maintained** across
+    :meth:`fuse` calls (one O(region) rescan of the merged task's row and
+    column — never the O(region²) full rebuild the old ``_RegionIndex``
+    paid per worklist step), and rollups served from the shared
+    :class:`GraphTopology` memos."""
+
+    def __init__(self, graph: Graph, selfcheck: bool = False):
+        self.graph = graph
+        self._base = graph.topology()
+        self._parent = dict(self._base.parent)
+        #: id(dispatch) -> {id(task) -> set of successor task ids}
+        self._succ: dict[int, dict[int, set[int]]] = {}
+        self._pins: list[Op] = []
+        self._undo: list[Callable[[], None]] = []
+        self._canonicalized = False
+        self._open = True
+        self._selfcheck = selfcheck
+
+    # -- lifecycle ----------------------------------------------------------
+    def __enter__(self) -> "GraphRewriteSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if not self._open:
+            return
+        if exc_type is None:
+            self.commit()
+        else:
+            self.rollback()
+
+    def _check_open(self) -> None:
+        if not self._open:
+            raise RewriteError("graph rewrite session is closed")
+
+    def commit(self) -> Optional[GraphTopology]:
+        """Install the maintained topology on the graph and close the
+        session.  After :meth:`canonicalize` the region tree was
+        restructured wholesale, so the cache is invalidated instead (the
+        next ``graph.topology()`` rebuilds lazily)."""
+        self._check_open()
+        self._open = False
+        g = self.graph
+        if self._canonicalized:
+            g._topology = None
+            return None
+        sig = g.structure_signature()
+        base = self._base
+        if sig == base.signature:
+            g._topology = base
+            return base
+        topo = GraphTopology(
+            # Fusion only regroups tasks; the leaf ops — and hence the
+            # value→op indices — are untouched and shared with the base.
+            producers=base.producers, consumers=base.consumers,
+            parent=self._parent, signature=sig,
+            _produces=base._produces, _consumes=base._consumes,
+            _intensity=base._intensity, _leaf_meta=base._leaf_meta,
+            _pins=base._pins)
+        g._topology = topo
+        return topo
+
+    def rollback(self) -> None:
+        """Undo every rewrite (exact inverses, reverse order) and
+        reinstate the untouched pre-session topology.  The lazy rollup
+        memos are dropped wholesale: any entry recomputed *mid-session*
+        (a selfcheck, or an ancestor query after `_invalidate_ancestors`)
+        was computed against the mutated tree and must not survive into
+        the restored one — they rebuild lazily against the rolled-back
+        structure on next query."""
+        self._check_open()
+        self._open = False
+        for undo in reversed(self._undo):
+            undo()
+        if self._undo:
+            base = self._base
+            base._produces.clear()
+            base._consumes.clear()
+            base._intensity.clear()
+            base._leaf_meta.clear()
+        self.graph._topology = self._base
+
+    # -- queries ------------------------------------------------------------
+    def produces(self, t: Op) -> frozenset:
+        return self._base.produces(t)
+
+    def consumes(self, t: Op) -> frozenset:
+        return self._base.consumes(t)
+
+    def intensity(self, t: Op) -> float:
+        return self._base.intensity(t)
+
+    def leaf_meta(self, t: Op) -> tuple[Optional[str], frozenset]:
+        return self._base.leaf_meta(t)
+
+    def _ensure_region(self, d: Op) -> dict[int, set[int]]:
+        succ = self._succ.get(id(d))
+        if succ is None:
+            topo = self._base
+            region = list(d.region)
+            prods = [topo.produces(t) for t in region]
+            cons = [topo.consumes(t) for t in region]
+            succ = {}
+            for i, a in enumerate(region):
+                succ[id(a)] = {id(b) for j, b in enumerate(region)
+                               if i != j and prods[i] & cons[j]}
+            self._succ[id(d)] = succ
+            self._pins.extend(region)
+            self._pins.append(d)
+        return succ
+
+    def adjacent(self, d: Op, a: Op, b: Op) -> bool:
+        """True when a feeds b or b feeds a through any value."""
+        succ = self._ensure_region(d)
+        return id(b) in succ[id(a)] or id(a) in succ[id(b)]
+
+    def creates_cycle(self, d: Op, a: Op, b: Op) -> bool:
+        """Fusing a and b is illegal when a third task sits on a dataflow
+        path between them (the merged task would both feed and consume
+        it).  This matters for decode graphs: qkv → cache-update →
+        attention must not fuse qkv with attention around the
+        cache-update node."""
+        succ = self._ensure_region(d)
+        for src, dst in ((id(a), id(b)), (id(b), id(a))):
+            seen: set[int] = set()
+            stack = [n for n in succ[src] if n != dst]
+            while stack:
+                n = stack.pop()
+                if n in seen:
+                    continue
+                seen.add(n)
+                if dst in succ[n]:
+                    return True
+                stack.extend(m for m in succ[n] if m != dst)
+        return False
+
+    def _invalidate_ancestors(self, d: Op) -> None:
+        """Drop the rollup memos of ``d`` and every enclosing region op:
+        restructuring inside ``d`` leaves ancestor produces/consumes sets
+        intact *as sets* but reassociates their float intensity sums and
+        leaf walks — a stale memo here would leak into a later query
+        (the selfcheck catches exactly this drift)."""
+        topo = self._base
+        cur: Optional[Op] = d
+        seen: set[int] = set()
+        while cur is not None and id(cur) not in seen:
+            seen.add(id(cur))
+            for memo in (topo._produces, topo._consumes, topo._intensity,
+                         topo._leaf_meta):
+                memo.pop(id(cur), None)
+            cur = self._parent.get(id(cur))
+
+    # -- rewrites -----------------------------------------------------------
+    def fuse(self, d: Op, a: Op, b: Op) -> Op:
+        """Fuse two tasks of one dispatch region into a new task,
+        preserving program order (transparent regions make this a pure
+        re-wrap).  The merged task's rollups come from O(1) set algebra
+        over the memoized operands; its successor row/column are rescanned
+        in one O(region) pass, everything else is untouched."""
+        self._check_open()
+        succ = self._ensure_region(d)
+        region = d.region
+        ia, ib = _index_identical(region, a), _index_identical(region, b)
+        first, second = (a, b) if ia <= ib else (b, a)
+        i = min(ia, ib)
+        merged = make_task(list(first.region) + list(second.region))
+        old_region = list(region)
+        region[i] = merged
+        _remove_identical(region, second)
+
+        topo = self._base
+        topo.note_fusion(merged, first, second)
+        mid = id(merged)
+        mprod, mcons = topo.produces(merged), topo.consumes(merged)
+        out: set[int] = set()
+        for t in region:
+            if t is merged:
+                continue
+            row = succ[id(t)]
+            row.discard(id(first))
+            row.discard(id(second))
+            if topo.produces(t) & mcons:
+                row.add(mid)
+            if mprod & topo.consumes(t):
+                out.add(id(t))
+        succ.pop(id(first), None)
+        succ.pop(id(second), None)
+        succ[mid] = out
+
+        self._parent[mid] = d
+        for c in merged.region:
+            self._parent[id(c)] = merged
+        self._pins.append(merged)
+        self._invalidate_ancestors(d)
+
+        def undo() -> None:
+            region[:] = old_region
+        self._undo.append(undo)
+        self._after()
+        return merged
+
+    def split(self, d: Op, task: Op, at: int) -> tuple[Op, Op]:
+        """Split ``task`` (a region op of dispatch ``d``) into two tasks
+        at child index ``at`` — the inverse of :meth:`fuse`.  Successor
+        rows for the two halves are rescanned in one O(region) pass."""
+        self._check_open()
+        if not 0 < at < len(task.region):
+            raise RewriteError(f"split index {at} out of range for "
+                               f"{task.name} ({len(task.region)} children)")
+        succ = self._ensure_region(d)
+        region = d.region
+        i = _index_identical(region, task)
+        head = make_task(list(task.region[:at]))
+        tail = make_task(list(task.region[at:]))
+        old_region = list(region)
+        region[i:i + 1] = [head, tail]
+
+        topo = self._base
+        succ.pop(id(task), None)
+        for part in (head, tail):
+            self._parent[id(part)] = d
+            for c in part.region:
+                self._parent[id(c)] = part
+            self._pins.append(part)
+        for part in (head, tail):
+            pprod, pcons = topo.produces(part), topo.consumes(part)
+            row: set[int] = set()
+            for t in region:
+                if t is part:
+                    continue
+                if pprod & topo.consumes(t):
+                    row.add(id(t))
+            succ[id(part)] = row
+        for t in region:
+            if t is head or t is tail:
+                continue
+            row = succ[id(t)]
+            row.discard(id(task))
+            tprod = topo.produces(t)
+            for part in (head, tail):
+                if tprod & topo.consumes(part):
+                    row.add(id(part))
+        self._invalidate_ancestors(d)
+
+        def undo() -> None:
+            region[:] = old_region
+        self._undo.append(undo)
+        self._after()
+        return head, tail
+
+    def canonicalize(self, fn: Callable[[Op], Op]) -> None:
+        """Wholesale region-tree restructure (e.g.
+        :func:`~repro.core.fusion.simplify_hierarchy`): apply ``fn`` to
+        every top-level op.  This invalidates the maintained topology at
+        commit (the one full rebuild happens lazily on the next
+        ``graph.topology()`` call, *after* the worklist is done — never
+        between worklist steps)."""
+        self._check_open()
+        g = self.graph
+        # fn may rewrite or REBIND op.region at any depth: snapshot both
+        # the list object and its content for an exact inverse.  Identity
+        # matters — earlier fuse/split undos captured these very list
+        # objects, so the inverse must restore content *into them* and
+        # re-point op.region at them, or a later rollback would mutate an
+        # orphaned list while the op shows the canonicalized one.
+        snapshot = [(op, op.region, list(op.region)) for op in g.walk()]
+        ops_obj = g.ops
+        old_ops = list(g.ops)
+
+        def undo() -> None:
+            for op, region_obj, children in snapshot:
+                region_obj[:] = children
+                op.region = region_obj
+            ops_obj[:] = old_ops
+            g.ops = ops_obj
+        # Logged before fn runs: simplify-style callbacks mutate the tree
+        # while traversing, so an exception mid-apply must still restore.
+        self._undo.append(undo)
+        self._canonicalized = True
+        g.ops = [fn(o) for o in g.ops]
+
+    # -- selfcheck ----------------------------------------------------------
+    def _after(self) -> None:
+        if self._selfcheck:
+            self.selfcheck()
+
+    def selfcheck(self) -> None:
+        """Assert every maintained structure equals a from-scratch
+        rebuild (property-test / debugging hook; O(graph) per call)."""
+        g = self.graph
+        fresh = GraphTopology.build(g)
+        live = {id(o) for o in g.walk()}
+        # Rollups for every live op the memo knows about.
+        for op in list(g.walk()):
+            assert self._base.produces(op) == frozenset(op.all_outs()), \
+                f"produces drift on {op.name}"
+            assert self._base.consumes(op) == frozenset(op.all_ins()), \
+                f"consumes drift on {op.name}"
+            assert self._base.intensity(op) == op.intensity(), \
+                f"intensity drift on {op.name}"
+        # Parent map over live ops.
+        maintained_parent = {
+            o.name: (self._parent.get(id(o)).name
+                     if self._parent.get(id(o)) is not None else None)
+            for o in g.walk()}
+        fresh_parent = {
+            o.name: (fresh.parent[id(o)].name
+                     if fresh.parent[id(o)] is not None else None)
+            for o in g.walk()}
+        assert maintained_parent == fresh_parent, "parent map drift"
+        # Successor graphs for every ensured dispatch still in the graph.
+        by_id = {id(o): o for o in g.walk()}
+        for did, succ in self._succ.items():
+            d = by_id.get(did)
+            if d is None or d.kind != "dispatch":
+                continue
+            fresh_succ = {}
+            for i, a in enumerate(d.region):
+                fresh_succ[id(a)] = {
+                    id(b) for j, b in enumerate(d.region)
+                    if i != j and frozenset(a.all_outs()) & frozenset(
+                        b.all_ins())}
+            live_rows = {k: v & live for k, v in succ.items() if k in live}
+            assert live_rows == fresh_succ, f"succ drift in {d.name}"
+
+
+# --------------------------------------------------------------------------
+# Structural-level session
+# --------------------------------------------------------------------------
+
+class ScheduleRewriteSession:
+    """Transactional rewrites over a Structural :class:`Schedule`.
+
+    Maintains the producer/consumer indices of
+    :class:`ScheduleTopology` in O(Δ) per primitive and re-derives the
+    per-buffer axis structures only for buffers a rewrite actually
+    touched; :meth:`commit` installs the result as the schedule's cached
+    topology (so the downstream DSE starts on a warm cache), and
+    :meth:`rollback` restores the schedule and its pre-session topology
+    exactly."""
+
+    def __init__(self, sched: Schedule, selfcheck: bool = False):
+        self.sched = sched
+        self._base = sched.topology()
+        self._producers = {b: list(v) for b, v in self._base.producers.items()}
+        self._consumers = {b: list(v) for b, v in self._base.consumers.items()}
+        self._pos = {n.name: i for i, n in enumerate(sched.nodes)}
+        self._dirty: set[str] = set()
+        self._edges: Optional[list[tuple[str, str, str]]] = list(
+            self._base.edges)
+        self._undo: list[Callable[[], None]] = []
+        self._open = True
+        self._selfcheck = selfcheck
+
+    # -- lifecycle ----------------------------------------------------------
+    def __enter__(self) -> "ScheduleRewriteSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if not self._open:
+            return
+        if exc_type is None:
+            self.commit()
+        else:
+            self.rollback()
+
+    def _check_open(self) -> None:
+        if not self._open:
+            raise RewriteError("schedule rewrite session is closed")
+
+    def commit(self) -> ScheduleTopology:
+        """Assemble the maintained topology, install it as the
+        schedule's cache, and close the session."""
+        self._check_open()
+        topo = self._assemble()
+        self._open = False
+        self.sched._topology = topo
+        return topo
+
+    def rollback(self) -> None:
+        """Undo every rewrite (exact inverses, reverse order) and
+        reinstate the untouched pre-session topology.  The base's lazy
+        per-(node, buffer) access cache is dropped: an entry computed
+        mid-session (e.g. an external ``access_for`` query) reflects a
+        mutated node body and must not survive into the restored one."""
+        self._check_open()
+        self._open = False
+        for undo in reversed(self._undo):
+            undo()
+        if self._undo:
+            self._base._access.clear()
+        self.sched._topology = self._base
+
+    def _assemble(self) -> ScheduleTopology:
+        sched = self.sched
+        sig = sched.structure_signature()
+        base = self._base
+        if sig == base.signature and not self._dirty:
+            return base
+        producers = {b: list(v) for b, v in self._producers.items() if v}
+        consumers = {b: list(v) for b, v in self._consumers.items() if v}
+        edges = self._edge_list()
+        access: dict[tuple[str, str], Optional[AccessMap]] = {}
+        axis_owner_dims: dict[str, tuple] = {}
+        axis_dims: dict[str, tuple] = {}
+        for bname, buf in sched.buffers.items():
+            if bname not in self._dirty and bname in base.axis_owner_dims:
+                # Untouched buffer: owners and their access maps are
+                # unchanged — reuse the pre-session derivation.
+                axis_owner_dims[bname] = base.axis_owner_dims[bname]
+                axis_dims[bname] = base.axis_dims[bname]
+                continue
+            owners = producers.get(bname, []) + consumers.get(bname, [])
+            per_axis: list[tuple] = []
+            dims: list[Optional[str]] = []
+            for axis in range(len(buf.shape)):
+                pairs = []
+                for node in owners:
+                    key = (node.name, bname)
+                    if key not in access:
+                        access[key] = node.access_for(bname)
+                    am = access[key]
+                    if am is None or axis >= len(am.entries):
+                        continue
+                    d = am.entries[axis][0]
+                    if d is not None:
+                        pairs.append((node, d))
+                per_axis.append(tuple(pairs))
+                dims.append(pairs[0][1] if pairs else None)
+            axis_owner_dims[bname] = tuple(per_axis)
+            axis_dims[bname] = tuple(dims)
+        buffers_of_dim: dict[str, list[str]] = {}
+        for bname in sched.buffers:
+            for d in axis_dims[bname]:
+                if d is not None and (d not in buffers_of_dim
+                                      or buffers_of_dim[d][-1] != bname):
+                    buffers_of_dim.setdefault(d, []).append(bname)
+        return ScheduleTopology(
+            producers=producers, consumers=consumers, edges=edges,
+            axis_owner_dims=axis_owner_dims, axis_dims=axis_dims,
+            buffers_of_dim={d: tuple(v) for d, v in buffers_of_dim.items()},
+            _access=access, signature=sig)
+
+    # -- queries ------------------------------------------------------------
+    def producers(self, value: str) -> list[Node]:
+        """Nodes writing ``value``, in node order."""
+        return list(self._producers.get(value, ()))
+
+    def consumers(self, value: str) -> list[Node]:
+        """Nodes reading ``value``, in node order."""
+        return list(self._consumers.get(value, ()))
+
+    def owners(self, value: str) -> list[Node]:
+        """Producers then consumers — the plan-projection scan order."""
+        return self.producers(value) + self.consumers(value)
+
+    def users_in_program_order(self, value: str) -> list[Node]:
+        """Every node with ``value`` in its args, ascending node order,
+        deduplicated (an RW node indexes as both producer and consumer)."""
+        seen: set[str] = set()
+        out: list[Node] = []
+        nodes = (self._producers.get(value, [])
+                 + self._consumers.get(value, []))
+        for n in sorted(nodes, key=lambda n: self._pos[n.name]):
+            if n.name not in seen:
+                seen.add(n.name)
+                out.append(n)
+        return out
+
+    def position(self, node: Node) -> int:
+        return self._pos[node.name]
+
+    def _edge_list(self) -> list[tuple[str, str, str]]:
+        if self._edges is None:
+            edges = []
+            for buf in self.sched.buffers:
+                for p in self._producers.get(buf, ()):
+                    for c in self._consumers.get(buf, ()):
+                        if p.name != c.name:
+                            edges.append((p.name, c.name, buf))
+            self._edges = edges
+        return self._edges
+
+    def edges(self) -> list[tuple[str, str, str]]:
+        """(src, dst, buffer) edges over the current structure, in the
+        canonical ``ScheduleTopology.build`` order (regenerated from the
+        Δ-maintained indices only when a rewrite invalidated them)."""
+        return list(self._edge_list())
+
+    def topo_order(self) -> list[Node]:
+        return topo_order_over(self.sched.nodes, self._edge_list(),
+                               self.sched.name)
+
+    def depth_of(self) -> dict[str, int]:
+        return depth_map_over(self.sched.nodes, self._edge_list(),
+                              self.sched.name)
+
+    # -- index maintenance ---------------------------------------------------
+    def _touch(self, *values: str) -> None:
+        self._dirty.update(values)
+        self._edges = None
+
+    def _reindex_positions(self) -> None:
+        self._pos = {n.name: i for i, n in enumerate(self.sched.nodes)}
+
+    def _index_insert(self, index: dict[str, list[Node]], value: str,
+                      node: Node) -> None:
+        lst = index.setdefault(value, [])
+        if any(x is node for x in lst):
+            return
+        pos = self._pos[node.name]
+        at = len(lst)
+        for j, other in enumerate(lst):
+            if self._pos[other.name] > pos:
+                at = j
+                break
+        lst.insert(at, node)
+
+    def _index_discard(self, index: dict[str, list[Node]], value: str,
+                       node: Node) -> None:
+        lst = index.get(value)
+        if lst is not None:
+            _remove_identical(lst, node)
+
+    def _sync_arg_index(self, node: Node, value: str) -> None:
+        """Make the two indices agree with ``node.args.get(value)``."""
+        effect = node.args.get(value)
+        if effect in (MemoryEffect.WRITE, MemoryEffect.READ_WRITE):
+            self._index_insert(self._producers, value, node)
+        else:
+            self._index_discard(self._producers, value, node)
+        if effect in (MemoryEffect.READ, MemoryEffect.READ_WRITE):
+            self._index_insert(self._consumers, value, node)
+        else:
+            self._index_discard(self._consumers, value, node)
+
+    def _after(self) -> None:
+        if self._selfcheck:
+            self.selfcheck()
+
+    def selfcheck(self) -> None:
+        """Assert the maintained topology equals a from-scratch build
+        (property-test / debugging hook; O(schedule) per call)."""
+        fresh = ScheduleTopology.build(self.sched)
+        assert (schedule_topology_fingerprint(self._assemble())
+                == schedule_topology_fingerprint(fresh)), \
+            f"topology drift on schedule {self.sched.name}"
+
+    # -- node primitives -----------------------------------------------------
+    def add_node(self, node: Node, index: int | None = None) -> Node:
+        """Insert ``node`` (at ``index``, default append) and index its
+        argument effects."""
+        self._check_open()
+        sched = self.sched
+        if any(n.name == node.name for n in sched.nodes):
+            raise RewriteError(f"duplicate node {node.name}")
+        old_nodes = list(sched.nodes)
+        sched.nodes.insert(len(sched.nodes) if index is None else index,
+                           node)
+        self._reindex_positions()
+        for b in node.writes():
+            self._index_insert(self._producers, b, node)
+        for b in node.reads():
+            self._index_insert(self._consumers, b, node)
+        self._touch(*node.args)
+
+        def undo() -> None:
+            sched.nodes[:] = old_nodes
+        self._undo.append(undo)
+        self._after()
+        return node
+
+    def retire_node(self, node: Node) -> None:
+        """Remove ``node`` from the schedule and the indices."""
+        self._check_open()
+        sched = self.sched
+        old_nodes = list(sched.nodes)
+        if not _remove_identical(sched.nodes, node):
+            raise RewriteError(f"unknown node {node.name}")
+        self._reindex_positions()
+        for b in node.writes():
+            self._index_discard(self._producers, b, node)
+        for b in node.reads():
+            self._index_discard(self._consumers, b, node)
+        self._touch(*node.args)
+
+        def undo() -> None:
+            sched.nodes[:] = old_nodes
+        self._undo.append(undo)
+        self._after()
+
+    def replace_nodes(self, olds: Sequence[Node], new: Node,
+                      index: int) -> Node:
+        """Atomically retire ``olds`` and insert ``new`` at ``index`` —
+        the multi-producer *fusion* arm (Alg. 3 case 2).  The caller
+        builds ``new`` (body concatenation, effect merging are pass
+        policy); the session owns the structural swap and re-indexing."""
+        self._check_open()
+        sched = self.sched
+        old_nodes = list(sched.nodes)
+        for o in olds:
+            if not _remove_identical(sched.nodes, o):
+                raise RewriteError(f"unknown node {o.name}")
+        sched.nodes.insert(index, new)
+        self._reindex_positions()
+        touched: set[str] = set(new.args)
+        for o in olds:
+            touched.update(o.args)
+            for b in o.writes():
+                self._index_discard(self._producers, b, o)
+            for b in o.reads():
+                self._index_discard(self._consumers, b, o)
+        for b in new.writes():
+            self._index_insert(self._producers, b, new)
+        for b in new.reads():
+            self._index_insert(self._consumers, b, new)
+        self._touch(*touched)
+
+        def undo() -> None:
+            sched.nodes[:] = old_nodes
+        self._undo.append(undo)
+        self._after()
+        return new
+
+    # -- argument / body primitives ------------------------------------------
+    def set_arg(self, node: Node, value: str, effect: str) -> None:
+        """Set ``node.args[value] = effect`` (dict position preserved for
+        an existing key, appended for a new one) and re-index."""
+        self._check_open()
+        old_args = dict(node.args)
+        node.args[value] = effect
+        self._sync_arg_index(node, value)
+        self._touch(value)
+
+        def undo() -> None:
+            node.args.clear()
+            node.args.update(old_args)
+        self._undo.append(undo)
+        self._after()
+
+    def drop_arg(self, node: Node, value: str) -> None:
+        """Remove ``value`` from ``node.args`` and the indices (used by
+        lowering to drop node-internal temporaries)."""
+        self._check_open()
+        old_args = dict(node.args)
+        node.args.pop(value, None)
+        self._index_discard(self._producers, value, node)
+        self._index_discard(self._consumers, value, node)
+        self._touch(value)
+
+        def undo() -> None:
+            node.args.clear()
+            node.args.update(old_args)
+        self._undo.append(undo)
+        self._after()
+
+    def rename_arg(self, node: Node, old: str, new: str) -> None:
+        """Re-point every use of ``old`` inside ``node`` (args entry, body
+        op operands, access-map keys) at ``new`` — the
+        ``replace_uses``-per-node primitive of multi-producer elimination
+        and balancing."""
+        self._check_open()
+        old_args = dict(node.args)
+        body_snapshot = [(o, list(o.ins), list(o.outs), dict(o.access))
+                         for o in node.body]
+        if old in node.args:
+            node.args[new] = node.args.pop(old)
+        for o in node.body:
+            o.ins = [new if v == old else v for v in o.ins]
+            o.outs = [new if v == old else v for v in o.outs]
+            if old in o.access:
+                o.access[new] = o.access.pop(old)
+        self._index_discard(self._producers, old, node)
+        self._index_discard(self._consumers, old, node)
+        self._sync_arg_index(node, new)
+        self._touch(old, new)
+
+        def undo() -> None:
+            node.args.clear()
+            node.args.update(old_args)
+            for o, ins, outs, access in body_snapshot:
+                o.ins = ins
+                o.outs = outs
+                o.access = access
+        self._undo.append(undo)
+        self._after()
+
+    def replace_uses(self, old: str, new: str,
+                     nodes: Iterable[Node]) -> None:
+        """:meth:`rename_arg` over a node subset (e.g. the dominated uses
+        of a duplicated buffer)."""
+        for n in nodes:
+            self.rename_arg(n, old, new)
+
+    def insert_copy(self, node: Node, buf: Buffer, src: str,
+                    dst: str) -> Op:
+        """Prepend an explicit memory copy ``src -> dst`` to ``node``
+        (paper Alg. 3 lines 5-7) and record the new READ effect."""
+        self._check_open()
+        old_args = dict(node.args)
+        old_body = list(node.body)
+        op = make_copy_op(buf, src, dst)
+        node.body.insert(0, op)
+        node.args[src] = MemoryEffect.READ
+        self._sync_arg_index(node, src)
+        self._touch(src, dst)
+
+        def undo() -> None:
+            node.args.clear()
+            node.args.update(old_args)
+            node.body[:] = old_body
+        self._undo.append(undo)
+        self._after()
+        return op
+
+    # -- buffer / stream primitives -------------------------------------------
+    def add_buffer(self, buf: Buffer, external: bool = False) -> Buffer:
+        """Register a new buffer (optionally as a schedule argument)."""
+        self._check_open()
+        sched = self.sched
+        if buf.name in sched.buffers:
+            raise RewriteError(f"duplicate buffer {buf.name}")
+        sched.buffers[buf.name] = buf
+        if external:
+            sched.args.append(buf.name)
+        self._touch(buf.name)
+
+        def undo() -> None:
+            del sched.buffers[buf.name]
+            if external:
+                sched.args.remove(buf.name)
+        self._undo.append(undo)
+        self._after()
+        return buf
+
+    def rename_buffer(self, old: str, new: str) -> None:
+        """Rename a buffer everywhere: the buffers dict key, the args
+        list, and every owning node (args + body operands)."""
+        self._check_open()
+        sched = self.sched
+        if old not in sched.buffers:
+            raise RewriteError(f"unknown buffer {old}")
+        if new in sched.buffers:
+            raise RewriteError(f"duplicate buffer {new}")
+        for n in self.users_in_program_order(old):
+            self.rename_arg(n, old, new)
+        buf = sched.buffers[old]
+        old_buffers = dict(sched.buffers)
+        old_args = list(sched.args)
+        old_outputs = list(sched.outputs)
+        old_value_bytes = dict(sched.value_bytes)
+        old_name = buf.name
+        sched.buffers = {(new if k == old else k): v
+                         for k, v in sched.buffers.items()}
+        buf.name = new
+        sched.args = [new if a == old else a for a in sched.args]
+        sched.outputs = [new if o == old else o for o in sched.outputs]
+        # The estimator costs reduction collectives off value_bytes; a
+        # stale key would silently zero this buffer's traffic.
+        sched.value_bytes = {(new if k == old else k): v
+                             for k, v in sched.value_bytes.items()}
+        self._touch(old, new)
+
+        def undo() -> None:
+            buf.name = old_name
+            sched.buffers = old_buffers
+            sched.args[:] = old_args
+            sched.outputs[:] = old_outputs
+            sched.value_bytes = old_value_bytes
+        self._undo.append(undo)
+        self._after()
+
+    def set_buffer_attrs(self, name: str, *, stages: int | None = None,
+                         placement: str | None = None) -> None:
+        """Adjust ping-pong depth / placement (the soft-FIFO transform).
+        Neither attribute participates in the topology, so no index
+        maintenance is needed — but the change still logs an inverse."""
+        self._check_open()
+        buf = self.sched.buffers[name]
+        old = (buf.stages, buf.placement)
+        if stages is not None:
+            buf.stages = stages
+        if placement is not None:
+            buf.placement = placement
+
+        def undo() -> None:
+            buf.stages, buf.placement = old
+        self._undo.append(undo)
+        self._after()
+
+    def add_token(self, src: str, dst: str) -> TokenEdge:
+        """Append an elastic-ordering token edge (Section 6.4.2)."""
+        self._check_open()
+        edge = TokenEdge(src=src, dst=dst)
+        self.sched.tokens.append(edge)
+
+        def undo() -> None:
+            _remove_identical(self.sched.tokens, edge)
+        self._undo.append(undo)
+        self._after()
+        return edge
+
+    # -- schedule-level attributes --------------------------------------------
+    def set_stage(self, node: Node, stage: int) -> None:
+        """Pipeline-stage assignment (not a topology input, but staged
+        state must still be transactional so callers can never observe a
+        half-applied mapping)."""
+        self._check_open()
+        old = node.stage
+        node.stage = stage
+
+        def undo() -> None:
+            node.stage = old
+        self._undo.append(undo)
+
+    def set_outputs(self, outputs: Sequence[str]) -> None:
+        self._check_open()
+        sched = self.sched
+        old = list(sched.outputs)
+        sched.outputs = list(outputs)
+
+        def undo() -> None:
+            sched.outputs = old
+        self._undo.append(undo)
+
+    def set_value_bytes(self, value_bytes: dict[str, int]) -> None:
+        self._check_open()
+        sched = self.sched
+        old = dict(sched.value_bytes)
+        sched.value_bytes = dict(value_bytes)
+
+        def undo() -> None:
+            sched.value_bytes = old
+        self._undo.append(undo)

@@ -1,0 +1,82 @@
+"""Golden capture/compare helpers for the pre-DSE pass pipeline.
+
+The transactional-rewrite refactor (``repro.core.rewrite``) is
+correctness-gated the same way PR 3 gated ``apply_rule_change``: the
+refactored passes must produce **bit-identical** output to the
+pre-refactor pipeline on every config.  The goldens pinned here were
+captured from ``main`` immediately *before* the passes were ported onto
+``RewriteSession`` — each file holds, per config (``train_4k`` on the
+SINGLE_POD mesh, ``training=True``, the paper-table configuration):
+
+* ``schedule`` — ``Schedule.to_json()`` right after data-path balancing
+  (construct → fuse → lower → multi-producer elimination → balance),
+  i.e. the exact structure the DSE receives;
+* ``plan`` — ``ShardingPlan.to_json()`` of a full ``optimize()`` run
+  (the DSE itself is untouched by the refactor, so any plan drift means
+  a pre-DSE pass changed behaviour).
+
+Generated names embed the global fresh-name counter, so every build
+resets it first (:func:`repro.core.ir.reset_fresh_names`) — capture and
+comparison are reproducible bit-for-bit in any process.
+
+Regenerate (only when a pass change is *intentional*)::
+
+    PYTHONPATH=src python tests/golden_utils.py
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.core import (SINGLE_POD, build_lm_graph, construct_functional,
+                        fuse_tasks, lower_to_structural, optimize)
+from repro.core.balance import balance_paths
+from repro.core.ir import reset_fresh_names
+from repro.core.multi_producer import eliminate_multi_producers
+
+GOLDEN_DIR = Path(__file__).resolve().parent / "goldens" / "pre_dse"
+SHAPE = "train_4k"
+
+
+def build_pre_dse_schedule(arch: str):
+    """Deterministically run the pre-DSE pipeline for ``arch``: fresh
+    name counter, then construct → fuse → lower → multi-producer →
+    balance.  Returns the post-balance :class:`~repro.core.ir.Schedule`."""
+    reset_fresh_names()
+    g = build_lm_graph(get_config(arch), SHAPES[SHAPE])
+    construct_functional(g)
+    fuse_tasks(g)
+    sched = lower_to_structural(g)
+    eliminate_multi_producers(sched)
+    balance_paths(sched)
+    return sched
+
+
+def build_final_plan(arch: str):
+    """Deterministically run the full ``optimize()`` pipeline for
+    ``arch`` and return the final :class:`~repro.core.plan.ShardingPlan`."""
+    reset_fresh_names()
+    g = build_lm_graph(get_config(arch), SHAPES[SHAPE])
+    _sched, plan, _rep = optimize(g, SINGLE_POD, training=True)
+    return plan
+
+
+def golden_path(arch: str) -> Path:
+    return GOLDEN_DIR / f"{arch}.json"
+
+
+def capture(archs=None) -> None:
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    for arch in archs or list_archs():
+        sched = build_pre_dse_schedule(arch)
+        plan = build_final_plan(arch)
+        golden_path(arch).write_text(json.dumps(
+            {"shape": SHAPE, "mesh": "SINGLE_POD",
+             "schedule": sched.to_dict(),
+             "plan": json.loads(plan.to_json())}, indent=1))
+        print(f"captured {golden_path(arch)}")
+
+
+if __name__ == "__main__":
+    capture()

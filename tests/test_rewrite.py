@@ -1,0 +1,500 @@
+"""Tests for the transactional rewrite layer (``repro.core.rewrite``).
+
+Four contracts, mirroring how PR 3 gated ``apply_rule_change``:
+
+1. **Golden invariance** — the refactored pre-DSE pipeline (construct →
+   fuse → lower → multi-producer → balance, all on ``RewriteSession``)
+   produces *bit-identical* post-balance schedules, and the full
+   ``optimize()`` produces bit-identical final plans, on every config in
+   ``repro.configs`` vs. goldens captured from the pre-refactor pipeline
+   (``tests/goldens/pre_dse``; regenerate with
+   ``PYTHONPATH=src python tests/golden_utils.py`` only when a pass
+   change is intentional).
+
+2. **Incremental == from-scratch** — with ``selfcheck=True`` every pass
+   asserts, after *every individual rewrite* in its worklist trace, that
+   the session's Δ-maintained topology equals a fresh
+   ``GraphTopology.build()`` / ``ScheduleTopology.build()``.
+
+3. **Rollback** — aborting a session restores the IR *and* the cached
+   topology object bit-exactly, no matter what prefix of rewrites ran.
+
+4. **Primitive semantics** — direct unit coverage of the multi-producer
+   arms, the session primitives, and the stage-assignment applier.
+"""
+import json
+
+import pytest
+
+from repro.configs import list_archs
+from repro.core import construct_functional
+from repro.core.fusion import fuse_tasks
+from repro.core.ir import (Buffer, Graph, MemoryEffect, Node, Op, Schedule,
+                           ScheduleTopology, make_dispatch, make_task,
+                           reset_fresh_names)
+from repro.core.multi_producer import eliminate_multi_producers
+from repro.core.pipeline import apply_stages, assign_stages, compute_stages
+from repro.core.rewrite import (GraphRewriteSession, RewriteError,
+                                ScheduleRewriteSession,
+                                graph_topology_fingerprint,
+                                schedule_topology_fingerprint)
+
+from golden_utils import (build_final_plan, build_pre_dse_schedule,
+                          golden_path)
+
+ARCHS = list_archs()
+#: configs cheap enough for the fast lane (every config runs pre-merge)
+FAST_ARCHS = ("smollm-135m", "xlstm-125m", "stablelm-3b")
+SLOW_ARCHS = tuple(a for a in ARCHS if a not in FAST_ARCHS)
+#: configs for the per-rewrite selfcheck sweeps (O(n) assert per rewrite)
+PROPERTY_ARCHS = ("smollm-135m", "xlstm-125m", "jamba-v0.1-52b",
+                  "musicgen-large")
+
+
+def _golden(arch):
+    return json.loads(golden_path(arch).read_text())
+
+
+# --------------------------------------------------------------------------
+# 1. Golden invariance: schedules and plans bit-identical to pre-refactor
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", FAST_ARCHS)
+def test_pre_dse_schedule_matches_golden_fast(arch):
+    assert build_pre_dse_schedule(arch).to_dict() == _golden(arch)["schedule"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", SLOW_ARCHS)
+def test_pre_dse_schedule_matches_golden_full(arch):
+    assert build_pre_dse_schedule(arch).to_dict() == _golden(arch)["schedule"]
+
+
+@pytest.mark.parametrize("arch", FAST_ARCHS)
+def test_final_plan_matches_golden_fast(arch):
+    assert json.loads(build_final_plan(arch).to_json()) \
+        == _golden(arch)["plan"]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", SLOW_ARCHS)
+def test_final_plan_matches_golden_full(arch):
+    assert json.loads(build_final_plan(arch).to_json()) \
+        == _golden(arch)["plan"]
+
+
+# --------------------------------------------------------------------------
+# 2. Property sweep: Δ-maintained topology == from-scratch after ANY prefix
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", PROPERTY_ARCHS)
+def test_selfcheck_sweep_over_pass_traces(arch):
+    """Run the real pass pipeline with per-rewrite selfchecks: after every
+    fuse / rename / insert / retire in the worklist traces, the maintained
+    topology must equal a fresh build (the assert lives inside the
+    session).  Also checks the pipeline output is unchanged by selfcheck
+    mode itself."""
+    from repro.configs import SHAPES, get_config
+    from repro.core import build_lm_graph
+    from repro.core.balance import balance_paths
+    from repro.core.lower import lower_to_structural
+
+    reset_fresh_names()
+    g = build_lm_graph(get_config(arch), SHAPES["train_4k"])
+    construct_functional(g)
+    fuse_tasks(g, selfcheck=True)
+    sched = lower_to_structural(g, selfcheck=True)
+    eliminate_multi_producers(sched, selfcheck=True)
+    balance_paths(sched, selfcheck=True)
+    assert sched.to_dict() == _golden(arch)["schedule"]
+    # Post-commit cache is warm and equal to a from-scratch build.
+    assert schedule_topology_fingerprint(sched.topology()) \
+        == schedule_topology_fingerprint(ScheduleTopology.build(sched))
+
+
+# --------------------------------------------------------------------------
+# 3. Rollback restores IR + topology exactly
+# --------------------------------------------------------------------------
+
+def _toy_schedule():
+    s = Schedule("toy")
+    for b, shape in (("a", (8,)), ("b", (8,)), ("c", (8,)), ("out", (8,))):
+        s.buffers[b] = Buffer(b, shape, dims=("i",))
+    s.args = ["a"]
+
+    def op(name, ins, outs):
+        return Op(name=name + "_op", kind="compute", ins=ins, outs=outs,
+                  loop_dims={"i": 8}, flops=8)
+
+    s.nodes = [
+        Node(name="n0", args={"a": MemoryEffect.READ,
+                              "b": MemoryEffect.WRITE},
+             body=[op("n0", ["a"], ["b"])]),
+        Node(name="n1", args={"b": MemoryEffect.READ,
+                              "c": MemoryEffect.WRITE},
+             body=[op("n1", ["b"], ["c"])]),
+        Node(name="n2", args={"b": MemoryEffect.READ,
+                              "c": MemoryEffect.READ,
+                              "out": MemoryEffect.WRITE},
+             body=[op("n2", ["b", "c"], ["out"])]),
+    ]
+    s.outputs = ["out"]
+    return s
+
+
+def test_schedule_rollback_restores_everything():
+    s = _toy_schedule()
+    base_topo = s.topology()
+    before = s.to_json()
+    before_fp = schedule_topology_fingerprint(base_topo)
+
+    rs = ScheduleRewriteSession(s, selfcheck=True)
+    # A representative mix of every primitive class.
+    rs.add_buffer(Buffer("b_dup", (8,), dims=("i",)))
+    rs.replace_uses("b", "b_dup", rs.users_in_program_order("b"))
+    rs.insert_copy(s.node("n1"), s.buffers["b_dup"], "b", "b_dup")
+    cp = Node(name="cp", args={"c": MemoryEffect.READ,
+                               "out": MemoryEffect.READ_WRITE},
+              body=[Op(name="cp_op", kind="copy", ins=["c"], outs=["out"],
+                       loop_dims={"i": 8})])
+    rs.add_node(cp, index=2)
+    rs.set_arg(s.node("n2"), "a", MemoryEffect.READ)
+    rs.drop_arg(s.node("n2"), "a")
+    rs.set_buffer_attrs("c", stages=5, placement="external")
+    rs.add_token("n1", "n2")
+    rs.set_stage(s.node("n0"), 3)
+    rs.retire_node(cp)
+    rs.rename_buffer("c", "c2")
+    assert s.to_json() != before  # genuinely mutated
+    rs.rollback()
+
+    assert s.to_json() == before
+    assert s.topology() is base_topo
+    assert schedule_topology_fingerprint(s.topology()) == before_fp
+
+
+def test_schedule_commit_installs_warm_topology():
+    s = _toy_schedule()
+    with ScheduleRewriteSession(s) as rs:
+        rs.add_buffer(Buffer("b2", (8,), dims=("i",)))
+        rs.replace_uses("b", "b2", [s.node("n2")])
+    # Committed topology is the cache (no rebuild on next access) and
+    # equals a from-scratch build.
+    cached = s._topology
+    assert cached is not None
+    assert s.topology() is cached
+    assert schedule_topology_fingerprint(cached) \
+        == schedule_topology_fingerprint(ScheduleTopology.build(s))
+    assert [n.name for n in s.topology().consumers["b2"]] == ["n2"]
+    assert [n.name for n in s.topology().consumers["b"]] == ["n1"]
+
+
+def test_schedule_session_context_manager_rolls_back_on_error():
+    s = _toy_schedule()
+    before = s.to_json()
+    with pytest.raises(RuntimeError, match="boom"):
+        with ScheduleRewriteSession(s) as rs:
+            rs.add_buffer(Buffer("tmp", (8,), dims=("i",)))
+            rs.rename_buffer("b", "renamed")
+            raise RuntimeError("boom")
+    assert s.to_json() == before
+
+
+def test_closed_session_raises():
+    s = _toy_schedule()
+    rs = ScheduleRewriteSession(s)
+    rs.commit()
+    with pytest.raises(RewriteError):
+        rs.add_buffer(Buffer("x", (8,), dims=("i",)))
+    with pytest.raises(RewriteError):
+        rs.commit()
+
+
+def test_duplicate_buffer_and_unknown_node_raise():
+    s = _toy_schedule()
+    rs = ScheduleRewriteSession(s)
+    with pytest.raises(RewriteError):
+        rs.add_buffer(Buffer("a", (8,), dims=("i",)))
+    with pytest.raises(RewriteError):
+        rs.retire_node(Node(name="ghost"))
+    rs.rollback()
+
+
+def _fused_graph(arch="smollm-135m"):
+    from repro.configs import SHAPES, get_config
+    from repro.core import build_lm_graph
+
+    reset_fresh_names()
+    g = build_lm_graph(get_config(arch), SHAPES["train_4k"])
+    construct_functional(g)
+    return g
+
+
+def test_graph_rollback_restores_structure_and_topology():
+    g = _fused_graph()
+    base_topo = g.topology()
+    before_sig = g.structure_signature()
+    before_fp = graph_topology_fingerprint(base_topo, g)
+
+    rs = GraphRewriteSession(g, selfcheck=True)
+    d = next(op for op in g.walk() if op.kind == "dispatch")
+    a, b = d.region[0], d.region[1]
+    merged = rs.fuse(d, a, b)
+    head, tail = rs.split(d, merged, 1)
+    rs.fuse(d, head, tail)
+    assert g.structure_signature() != before_sig
+    rs.rollback()
+
+    assert g.structure_signature() == before_sig
+    assert g.topology() is base_topo
+    assert graph_topology_fingerprint(g.topology(), g) == before_fp
+
+
+def test_graph_split_is_inverse_of_fuse():
+    g = _fused_graph()
+    with GraphRewriteSession(g, selfcheck=True) as rs:
+        d = next(op for op in g.walk() if op.kind == "dispatch")
+        a, b = d.region[0], d.region[1]
+        a_children = [id(c) for c in a.region]
+        b_children = [id(c) for c in b.region]
+        merged = rs.fuse(d, a, b)
+        head, tail = rs.split(d, merged, len(a_children))
+        # The split halves own exactly the original child op objects.
+        assert [id(c) for c in head.region] == a_children
+        assert [id(c) for c in tail.region] == b_children
+    # committed without error; topology cache equals fresh build
+    from repro.core.ir import GraphTopology
+    assert graph_topology_fingerprint(g.topology(), g) \
+        == graph_topology_fingerprint(GraphTopology.build(g), g)
+
+
+def test_graph_split_bad_index_raises():
+    g = _fused_graph()
+    rs = GraphRewriteSession(g)
+    d = next(op for op in g.walk() if op.kind == "dispatch")
+    merged = rs.fuse(d, d.region[0], d.region[1])
+    with pytest.raises(RewriteError):
+        rs.split(d, merged, 0)
+    with pytest.raises(RewriteError):
+        rs.split(d, merged, len(merged.region))
+    rs.rollback()
+
+
+def test_graph_rollback_after_fuse_plus_canonicalize():
+    """Regression: canonicalize rebinds region lists; its undo must
+    restore the *same* list objects so fuse undos logged earlier still
+    land in the live tree, and rolling back the whole session restores
+    the pre-session structure exactly."""
+    from repro.core.fusion import simplify_hierarchy
+
+    g = _fused_graph()
+    before_sig = g.structure_signature()
+    rs = GraphRewriteSession(g)
+    d = next(op for op in g.walk() if op.kind == "dispatch")
+    rs.fuse(d, d.region[0], d.region[1])
+    rs.canonicalize(simplify_hierarchy)
+    assert g.structure_signature() != before_sig
+    rs.rollback()
+    assert g.structure_signature() == before_sig
+
+
+def test_canonicalize_exception_mid_apply_rolls_back():
+    """A callback raising mid-canonicalize (after it already mutated the
+    tree in place) must still restore the pre-session structure."""
+    from repro.core.fusion import simplify_hierarchy
+
+    g = _fused_graph()
+    before_sig = g.structure_signature()
+    calls = []
+
+    def poisoned(op):
+        out = simplify_hierarchy(op)
+        calls.append(op.name)
+        if len(calls) >= 1:
+            raise RuntimeError("mid-canonicalize")
+        return out
+
+    with pytest.raises(RuntimeError, match="mid-canonicalize"):
+        with GraphRewriteSession(g) as rs:
+            rs.canonicalize(poisoned)
+    assert g.structure_signature() == before_sig
+
+
+def test_rename_buffer_migrates_value_bytes():
+    s = _toy_schedule()
+    s.value_bytes = {"a": 1, "b": 2, "c": 3, "out": 4}
+    with ScheduleRewriteSession(s) as rs:
+        rs.rename_buffer("b", "b_renamed")
+    assert s.value_bytes == {"a": 1, "b_renamed": 2, "c": 3, "out": 4}
+    rs2 = ScheduleRewriteSession(s)
+    rs2.rename_buffer("b_renamed", "bb")
+    rs2.rollback()
+    assert s.value_bytes == {"a": 1, "b_renamed": 2, "c": 3, "out": 4}
+
+
+def test_graph_rollback_drops_stale_rollup_memos():
+    """Regression: a rollup memo recomputed *mid-session* (after
+    `_invalidate_ancestors` popped it) reflects the mutated tree; it must
+    not survive rollback into the restored one."""
+    def leaf(name, kind, ins, outs):
+        return Op(name=name, kind=kind, ins=ins, outs=outs,
+                  loop_dims={"i": 8}, flops=8)
+
+    a = make_task([leaf("a", "matmul", ["x"], ["ta"])])
+    b = make_task([leaf("b", "matmul", ["x"], ["tb"])])
+    c = make_task([leaf("c", "elementwise", ["ta", "tb"], ["tc"])])
+    d = make_dispatch([a, b, c])
+    g = Graph("g", ops=[d])
+
+    rs = GraphRewriteSession(g)
+    rs.fuse(d, a, c)
+    # Mid-session ancestor query: caches {'x','tb'} against the fused
+    # tree (ta became internal to merged, tb now crosses into it).
+    assert set(rs.consumes(d)) == {"x", "tb"}
+    rs.rollback()
+    # The restored tree's true live-ins are just {'x'} — the stale memo
+    # must be gone, not served from the reinstated base topology.
+    assert set(g.topology().consumes(d)) == {"x"}
+    assert g.topology().intensity(d) == d.intensity()
+
+
+def test_fusion_exception_leaves_graph_untouched():
+    """A pass aborting mid-worklist must not leave the graph half-fused."""
+    g = _fused_graph()
+    before_sig = g.structure_signature()
+
+    class Boom(Exception):
+        pass
+
+    with pytest.raises(Boom):
+        with GraphRewriteSession(g) as rs:
+            d = next(op for op in g.walk() if op.kind == "dispatch")
+            rs.fuse(d, d.region[0], d.region[1])
+            raise Boom()
+    assert g.structure_signature() == before_sig
+
+
+# --------------------------------------------------------------------------
+# 4a. Multi-producer elimination arms (direct unit coverage)
+# --------------------------------------------------------------------------
+
+def _mp_schedule(effects_list, external=()):
+    """Schedule with nodes n0..nK over a single shared buffer ``buf``."""
+    s = Schedule("mp")
+    s.buffers["buf"] = Buffer("buf", (16,), dims=("i",))
+    s.buffers["out"] = Buffer("out", (16,), dims=("i",))
+    s.args = list(external)
+    for i, eff in enumerate(effects_list):
+        ins = ["buf"] if eff in (MemoryEffect.READ,
+                                 MemoryEffect.READ_WRITE) else []
+        outs = ["buf"] if eff in (MemoryEffect.WRITE,
+                                  MemoryEffect.READ_WRITE) else []
+        s.nodes.append(Node(
+            name=f"n{i}", args={"buf": eff},
+            body=[Op(name=f"n{i}_op", kind="compute", ins=ins, outs=outs,
+                     loop_dims={"i": 16}, flops=16)]))
+    return s
+
+
+def test_mp_internal_chained_duplication_three_producers():
+    """Three internal-buffer producers → two chained duplicates, each
+    producer owning exactly one copy; the RW producer gets a copy op."""
+    s = _mp_schedule([MemoryEffect.WRITE, MemoryEffect.READ_WRITE,
+                      MemoryEffect.WRITE, MemoryEffect.READ])
+    stats = eliminate_multi_producers(s)
+    assert stats.duplicated == 2
+    assert stats.copies == 1  # only n1 read the previous contents
+    # Every buffer single-producer now.
+    for b in s.buffers:
+        assert len(s.producers_of(b)) <= 1, b
+    # Chain: n0 writes buf; n1 owns dup0 (with copy buf->dup0 prepended);
+    # n2 owns dup1; the trailing reader n3 follows the last duplicate.
+    n1, n2, n3 = s.node("n1"), s.node("n2"), s.node("n3")
+    assert n1.body[0].kind == "copy"
+    assert n1.body[0].ins == ["buf"]
+    dup0 = n1.body[0].outs[0]
+    assert dup0.startswith("buf_dup")
+    assert n1.args[dup0] == MemoryEffect.READ_WRITE
+    dup1 = next(b for b in n2.writes())
+    assert dup1 != dup0 and dup1.startswith("buf_dup")
+    assert list(n3.reads()) == [dup1]
+    # Duplicates inherit the base buffer's attributes.
+    assert s.buffers[dup0].shape == s.buffers["buf"].shape
+    assert s.buffers[dup0].dims == s.buffers["buf"].dims
+
+
+def test_mp_internal_duplication_no_copy_for_blind_writer():
+    s = _mp_schedule([MemoryEffect.WRITE, MemoryEffect.WRITE,
+                      MemoryEffect.READ])
+    stats = eliminate_multi_producers(s)
+    assert stats.duplicated == 1 and stats.copies == 0
+    # n1 (blind write) owns the duplicate without a copy op.
+    assert all(o.kind != "copy" for o in s.node("n1").body)
+
+
+def test_mp_external_merge_effect_policy():
+    """External-buffer producers fuse into one node; conflicting effects
+    merge to RW, bodies concatenate in program order."""
+    s = _mp_schedule([MemoryEffect.WRITE, MemoryEffect.READ_WRITE],
+                     external=("buf",))
+    stats = eliminate_multi_producers(s)
+    assert stats.merged == 2 and stats.duplicated == 0
+    assert len(s.nodes) == 1
+    merged = s.nodes[0]
+    assert merged.name.startswith("merged_node")
+    # wo (n0) + rw (n1) -> rw
+    assert merged.args["buf"] == MemoryEffect.READ_WRITE
+    assert [o.name for o in merged.body] == ["n0_op", "n1_op"]
+    assert len(s.producers_of("buf")) == 1
+
+
+def test_mp_is_transactional():
+    """If elimination dies mid-pass the schedule must be untouched."""
+    s = _mp_schedule([MemoryEffect.WRITE, MemoryEffect.WRITE,
+                      MemoryEffect.READ])
+    # Poison: pre-create the exact buffer name the pass's first
+    # duplication will generate, so rs.add_buffer raises RewriteError
+    # mid-pass (after the producer scan already started).
+    reset_fresh_names(0)
+    s.buffers["buf_dup_0"] = Buffer("buf_dup_0", (16,), dims=("i",))
+    before = s.to_json()
+    with pytest.raises(RewriteError):
+        eliminate_multi_producers(s)
+    assert s.to_json() == before
+
+
+# --------------------------------------------------------------------------
+# 4b. Stage assignment: pure analysis + transactional applier
+# --------------------------------------------------------------------------
+
+def test_compute_stages_is_pure():
+    s = _toy_schedule()
+    before = s.to_json()
+    mapping = compute_stages(s, 2)
+    assert s.to_json() == before            # no hidden side effect
+    assert set(mapping) == {"n0", "n1", "n2"}
+    assert mapping["n0"] == 0
+
+
+def test_apply_stages_writes_mapping():
+    s = _toy_schedule()
+    mapping = compute_stages(s, 2)
+    apply_stages(s, mapping)
+    for n in s.nodes:
+        assert n.stage == mapping[n.name]
+
+
+def test_assign_stages_matches_compute_plus_apply():
+    s1, s2 = _toy_schedule(), _toy_schedule()
+    out = assign_stages(s1, 2)
+    assert out == compute_stages(s2, 2)
+    apply_stages(s2, out)
+    assert s1.to_json() == s2.to_json()
+
+
+def test_apply_stages_all_or_nothing():
+    s = _toy_schedule()
+    with pytest.raises(KeyError):
+        apply_stages(s, {"n0": 1, "ghost": 2, "n2": 3})
+    # Nothing half-applied: every node still at its initial stage.
+    assert [n.stage for n in s.nodes] == [0, 0, 0]
