@@ -25,12 +25,17 @@ Regression gate (CI)::
         --compare BENCH_compile_time.json [--threshold 2.0] [--fast]
 
 re-runs the suite and exits nonzero when any arm's ``optimize()``
-wall-time — or its total pre-DSE structural-pass time (``fuse_s +
-lower_s + mp_s + balance_s``, the passes on the transactional rewrite
-substrate) — exceeds ``threshold ×`` the committed baseline (arms faster
-than ``--min-delta-s`` absolute growth are ignored — the PolyBench arms
-run in single-digit milliseconds and would otherwise gate on scheduler
-noise; the pre-DSE check has its own ``PRE_DSE_MIN_DELTA_S`` guard).  QoR (``total_s``) drift is reported alongside and fails the
+wall-time — or its total pre-DSE structural-pass time (``construct_s +
+fuse_s + lower_s + mp_s + balance_s``, the passes on the transactional
+rewrite substrate), or the fusion pass ``fuse_s`` alone (the balance
+phase's Δ-maintained pair heap over the session's reachability index is
+the dominant pre-DSE win, and a regression there must not hide under the
+pre-DSE noise floor) — exceeds ``threshold ×`` the committed baseline
+(arms faster than ``--min-delta-s`` absolute growth are ignored — the
+PolyBench arms run in single-digit milliseconds and would otherwise gate
+on scheduler noise; the pre-DSE and fuse checks have their own
+``PRE_DSE_MIN_DELTA_S`` / ``FUSE_MIN_DELTA_S`` guards).  QoR
+(``total_s``) drift is reported alongside and fails the
 gate when the estimated schedule got *worse* — compile-time wins must
 not be bought with QoR.  In compare mode the fresh results go to a
 scratch dir (unless ``REPRO_BENCH_OUT_DIR`` is set) so a failing run
@@ -64,7 +69,10 @@ def _time_optimize(graph_builder, training: bool) -> dict:
         "wall_s": dt,
         "plan_s": rep.plan_time_s,
         # Per-pass wall time of the pre-DSE structural passes (all on the
-        # transactional rewrite substrate); their sum gates in --compare.
+        # transactional rewrite substrate); their sum gates in --compare,
+        # and fuse_s additionally gates on its own so a reachability-index
+        # regression can't hide under the pre-DSE noise floor.
+        "construct_s": rep.construct_s,
         "fuse_s": rep.fuse_s,
         "lower_s": rep.lower_s,
         "mp_s": rep.mp_s,
@@ -113,6 +121,13 @@ def run(report, archs=None, fast: bool = False) -> dict:
 #: noise is still noise).
 PRE_DSE_MIN_DELTA_S = 0.05
 
+#: absolute growth below this many seconds never gates the fuse_s check.
+#: Fusion now runs in the low tens of milliseconds on the largest arm
+#: (the incremental reachability index); this guard keeps millisecond
+#: jitter from gating while still catching a slide back toward the old
+#: ~0.3 s O(n²·DFS) balance phase.
+FUSE_MIN_DELTA_S = 0.02
+
 
 def compare(results: dict, baseline: dict, threshold: float,
             min_delta_s: float, qor_tolerance: float = 1e-3,
@@ -138,9 +153,14 @@ def compare(results: dict, baseline: dict, threshold: float,
             pre = (f", pre-dse {old['pre_dse_s']*1e3:.2f}ms -> "
                    if "pre_dse_s" in old else ", pre-dse ") \
                   + f"{new['pre_dse_s']*1e3:.2f}ms"
+        fuse = ""
+        if "fuse_s" in new:
+            fuse = (f", fuse {old['fuse_s']*1e3:.2f}ms -> "
+                    if "fuse_s" in old else ", fuse ") \
+                   + f"{new['fuse_s']*1e3:.2f}ms"
         print(f"{arm}: wall {old['wall_s']:.3f}s -> {new['wall_s']:.3f}s "
               f"({ratio:.2f}x), qor {old['total_s']*1e3:.3f}ms -> "
-              f"{new['total_s']*1e3:.3f}ms{plan}{pre}")
+              f"{new['total_s']*1e3:.3f}ms{plan}{pre}{fuse}")
         if (ratio > threshold
                 and new["wall_s"] - old["wall_s"] > min_delta_s):
             failures.append(
@@ -160,6 +180,19 @@ def compare(results: dict, baseline: dict, threshold: float,
                     f"is {pre_ratio:.2f}x the baseline "
                     f"{old['pre_dse_s']*1e3:.2f}ms (threshold "
                     f"{threshold:.2f}x)")
+        # fuse_s gates on its own: the balance-phase pair heap + the
+        # session's reachability index hold the dominant pre-DSE win, and
+        # a regression there could hide under PRE_DSE_MIN_DELTA_S.
+        if "fuse_s" in new and "fuse_s" in old:
+            fuse_ratio = (new["fuse_s"] / old["fuse_s"]
+                          if old["fuse_s"] else float("inf"))
+            if (fuse_ratio > threshold
+                    and new["fuse_s"] - old["fuse_s"] > FUSE_MIN_DELTA_S):
+                failures.append(
+                    f"{arm}: fusion pass time {new['fuse_s']*1e3:.2f}ms is "
+                    f"{fuse_ratio:.2f}x the baseline "
+                    f"{old['fuse_s']*1e3:.2f}ms (threshold {threshold:.2f}x)"
+                    f" — reachability-index / pair-heap regression?")
         if new["total_s"] > old["total_s"] * (1 + qor_tolerance):
             failures.append(
                 f"{arm}: QoR regressed — estimated total_s "

@@ -4,10 +4,20 @@ Walk regions bottom-up; every *dispatchable* region (owned by an iterative
 op — here: the module or a composite block — and containing at least two
 iterative sub-ops) is wrapped in a ``dispatch`` whose children each become a
 ``task``.  The result is the hierarchical Functional dataflow of Fig. 3.
+
+The pass runs inside a :class:`~repro.core.rewrite.GraphRewriteSession`
+(one :meth:`~repro.core.rewrite.GraphRewriteSession.wrap_dispatch` per
+dispatchable region), which makes the *entry* pass transactional like
+every later one — an exception leaves the graph untouched — and commits
+a maintained topology, so ``fuse_tasks`` starts on a warm cache instead
+of paying a full rebuild at the construct/fuse boundary.  Wrapping never
+touches leaf ops, so the value→op indices carry over verbatim; only the
+parent map grows.
 """
 from __future__ import annotations
 
-from .ir import Graph, Op, make_dispatch, make_task
+from .ir import Graph, Op
+from .rewrite import GraphRewriteSession
 
 #: op kinds considered "iterative" (own a loop nest / region) — paper: an op
 #: is iterative if it is a loop or a func.  For the tensor graphs we trace,
@@ -25,21 +35,22 @@ def is_dispatchable(ops: list[Op]) -> bool:
     return sum(1 for o in ops if is_iterative(o)) >= 2
 
 
-def _construct_region(ops: list[Op]) -> list[Op]:
+def _construct_region(rs: GraphRewriteSession, owner: Op | None,
+                      ops: list[Op]) -> None:
     # Bottom-up: recurse into nested regions first (post-order walk).
     for o in ops:
         if o.has_region:
-            o.region = _construct_region(o.region)
-    if not is_dispatchable(ops):
-        return ops
-    # Wrap each op into its own task, then all tasks into one dispatch.
-    tasks = [o if o.kind in ("task", "dispatch") else make_task([o])
-             for o in ops]
-    return [make_dispatch(tasks)]
+            _construct_region(rs, o, o.region)
+    if is_dispatchable(ops):
+        rs.wrap_dispatch(owner)
 
 
-def construct_functional(graph: Graph) -> Graph:
+def construct_functional(graph: Graph, selfcheck: bool = False) -> Graph:
     """Paper Algorithm 1: produce the initial (maximally split) Functional
-    dataflow in-place and return the graph."""
-    graph.ops = _construct_region(graph.ops)
+    dataflow in-place and return the graph.
+
+    ``selfcheck`` asserts the session's maintained topology against a
+    from-scratch rebuild after every wrap (tests only)."""
+    with GraphRewriteSession(graph, selfcheck=selfcheck) as rs:
+        _construct_region(rs, None, graph.ops)
     return graph

@@ -16,14 +16,22 @@ single sub-task collapses, empty dispatches disappear).
 
 Every structural mutation flows through
 :class:`~repro.core.rewrite.GraphRewriteSession`: adjacency / cycle
-queries run against the session's per-dispatch successor graph (built
-once, maintained in O(Δ) per fusion), pattern matching reads the shared
-:class:`~repro.core.ir.GraphTopology` leaf-kind rollups, and the final
-hierarchy canonicalisation is a single transactional
+queries are lookups against the session's per-dispatch region index
+(direct edges + an incrementally-maintained reachability closure — no
+DFS per query), pattern matching reads the shared
+:class:`~repro.core.ir.GraphTopology` leaf-kind rollups, the balance
+phase runs a Δ-maintained candidate-pair heap (seeded once from the
+region's edges, extended only with pairs incident to the last fusion —
+the former per-step all-pairs re-enumeration with a DFS per pair was the
+dominant pre-DSE compile cost), and the final hierarchy canonicalisation
+is a single transactional
 :meth:`~repro.core.rewrite.GraphRewriteSession.canonicalize`.
 """
 from __future__ import annotations
 
+import heapq
+import itertools
+from collections import deque
 from dataclasses import dataclass, field
 
 from .ir import Graph, Op, make_task
@@ -95,14 +103,8 @@ def _consumes(t: Op) -> set[str]:
 
 def adjacent(a: Op, b: Op) -> bool:
     """True when a feeds b or b feeds a through any value (standalone
-    form; the fusion phases use the session's maintained successor
-    graph)."""
+    form; the fusion phases use the session's maintained region index)."""
     return bool(_produces(a) & _consumes(b)) or bool(_produces(b) & _consumes(a))
-
-
-def _ordered(a: Op, b: Op, tasks: list[Op]) -> tuple[Op, Op]:
-    ia, ib = tasks.index(a), tasks.index(b)
-    return (a, b) if ia <= ib else (b, a)
 
 
 # --------------------------------------------------------------------------
@@ -118,15 +120,18 @@ class FusionStats:
 
 def _pattern_phase(d: Op, patterns: list[FusionPattern],
                    stats: FusionStats, rs: GraphRewriteSession) -> None:
-    worklist = list(d.region)
+    worklist = deque(d.region)
     while worklist:
-        t = worklist.pop(0)
-        if not any(x is t for x in d.region):
+        t = worklist.popleft()
+        if not rs.alive(d, t):
             continue    # already fused away
-        for u in list(d.region):
-            if u is t or not rs.adjacent(d, t, u) or rs.creates_cycle(d, t, u):
+        # Candidates must be adjacent, so scanning t's neighbours (in
+        # region order — the order a full `d.region` scan would visit)
+        # is equivalent to the old O(region) sweep per worklist item.
+        for u in rs.neighbors_in_order(d, t):
+            if rs.creates_cycle(d, t, u):
                 continue
-            p, c = _ordered(t, u, d.region)
+            p, c = rs.order(d, t, u)
             pm, cm = rs.leaf_meta(p), rs.leaf_meta(c)
             if any(pat.matches_meta(pm, cm) for pat in patterns):
                 merged = rs.fuse(d, p, c)
@@ -146,25 +151,90 @@ LIGHT_FRACTION = 0.05
 
 def _balance_phase(d: Op, stats: FusionStats, rs: GraphRewriteSession,
                    max_tasks: int | None = None) -> None:
-    while len(d.region) > 1:
-        crit = max(rs.intensity(t) for t in d.region)
-        pairs = [(a, b) for i, a in enumerate(d.region)
-                 for b in d.region[i + 1:]
-                 if rs.adjacent(d, a, b) and not rs.creates_cycle(d, a, b)]
-        forced = max_tasks is not None and len(d.region) > max_tasks
-        if not forced:
-            pairs = [(a, b) for a, b in pairs
-                     if min(rs.intensity(a), rs.intensity(b))
-                     <= LIGHT_FRACTION * crit]
-        if not pairs:
+    """Least-critical re-balancing over a Δ-maintained candidate heap.
+
+    Candidate pairs are seeded once from the region's edge set and
+    extended only with pairs incident to each fusion's merged task; the
+    heap key is ``(combined intensity, rank(a), rank(b))`` with the
+    session's program-order ranks as the **explicit tie-break** (the old
+    all-pairs ``min()`` resolved ties by enumeration order — the same
+    order, but implicitly; ranks are static per task, so entries never
+    go stale as the region list shifts).  Lazy invalidation keeps the
+    heap honest:
+
+    * entries whose endpoint was fused away are dropped on pop;
+    * cycle-creating pairs are dropped *permanently* on pop — fusing
+      other pairs only contracts the region graph, which can add paths
+      between two live tasks but never remove one.  The exception is the
+      session's vanished-edge fallback (a fuse over a multi-produced
+      value can sever an edge): it bumps ``region_epoch``, on which the
+      heap reseeds from the full edge set so a discarded pair that
+      became legal is reconsidered — matching the old per-step
+      re-enumeration on such graphs;
+    * pairs failing the light-task guard are parked in a side heap keyed
+      by min-intensity and promoted when the critical intensity (which
+      is non-decreasing) grows enough — or wholesale while ``max_tasks``
+      forces fusion past the guard.
+    """
+    region = d.region
+    if len(region) <= 1:
+        return
+    crit = max(rs.intensity(t) for t in region)
+    seq = itertools.count()
+
+    def entry(a: Op, b: Op) -> tuple:
+        a, b = rs.order(d, a, b)
+        ia, ib = rs.intensity(a), rs.intensity(b)
+        # (sum, rank, rank) is unique among *live* pairs (ranks are unique
+        # per live task), so the sequence number never influences which
+        # candidate is selected — it only keeps comparisons away from the
+        # Op payload when a dead entry collides with a live one (e.g. a
+        # zero-intensity fusion leaves sum and inherited rank unchanged).
+        return (ia + ib, rs.rank(d, a), rs.rank(d, b), next(seq),
+                min(ia, ib), a, b)
+
+    active = [entry(a, b) for a, b in rs.adjacent_pairs(d)]
+    heapq.heapify(active)
+    deferred: list[tuple] = []   # (min_int, sum, rank, rank, seq, a, b)
+    epoch = rs.region_epoch(d)
+
+    while len(region) > 1:
+        forced = max_tasks is not None and len(region) > max_tasks
+        limit = LIGHT_FRACTION * crit
+        while deferred and (forced or deferred[0][0] <= limit):
+            mn, s, ra, rb, sq, a, b = heapq.heappop(deferred)
+            heapq.heappush(active, (s, ra, rb, sq, mn, a, b))
+        cand = None
+        while active:
+            s, ra, rb, sq, mn, a, b = heapq.heappop(active)
+            if not (rs.alive(d, a) and rs.alive(d, b)):
+                continue
+            if not forced and mn > limit:
+                heapq.heappush(deferred, (mn, s, ra, rb, sq, a, b))
+                continue
+            if rs.creates_cycle(d, a, b):
+                continue
+            cand = (s, a, b)
             break
-        a, b = min(pairs,
-                   key=lambda p: rs.intensity(p[0]) + rs.intensity(p[1]))
-        fused_intensity = rs.intensity(a) + rs.intensity(b)
+        if cand is None:
+            break
+        s, a, b = cand
         # Paper line 9: stop when fusing would create a new critical task.
-        if fused_intensity > crit and not forced:
+        if s > crit and not forced:
             break
         merged = rs.fuse(d, a, b)
+        crit = max(crit, rs.intensity(merged))
+        if rs.region_epoch(d) != epoch:
+            # Reachability shrank (vanished-edge fallback): permanently-
+            # discarded cycle pairs may be legal now — reseed from the
+            # live edge set.  Duplicate entries are harmless: identical
+            # keys up to seq, and dead copies drop at pop.
+            epoch = rs.region_epoch(d)
+            for pa, pb in rs.adjacent_pairs(d):
+                heapq.heappush(active, entry(pa, pb))
+        else:
+            for t in rs.neighbors(d, merged):
+                heapq.heappush(active, entry(merged, t))
         stats.balance_fusions += 1
         stats.log.append(f"balance: {a.name}+{b.name}->{merged.name}")
 

@@ -24,6 +24,7 @@ for the full correspondence table.
 from __future__ import annotations
 
 import itertools
+from collections import deque
 from dataclasses import dataclass, field, replace
 from fractions import Fraction
 from typing import Callable, Iterable, Iterator, Optional, Sequence
@@ -490,8 +491,10 @@ class Graph:
 
     def topology(self) -> GraphTopology:
         """The cached :class:`GraphTopology`, rebuilt transparently when
-        the structure signature no longer matches (e.g. after
-        ``construct_functional`` re-wrapped the region tree)."""
+        the structure signature no longer matches (sessionless external
+        surgery; the pass pipeline itself — construction included —
+        commits maintained topologies, so its boundaries are cache
+        hits)."""
         if (self._topology is None
                 or self._topology.signature != self.structure_signature()):
             self._topology = GraphTopology.build(self)
@@ -550,11 +553,36 @@ class Node:
                 if e in (MemoryEffect.WRITE, MemoryEffect.READ_WRITE)]
 
     def access_for(self, value: str) -> Optional[AccessMap]:
-        """Merged access map for ``value`` across body ops (first found)."""
-        for o in self.body:
-            if value in o.access:
-                return o.access[value]
-        return None
+        """Merged access map for ``value`` across body ops.
+
+        Per tensor axis, the entry of the *earliest* body op whose map
+        names a loop dim at that axis wins; axes no body op indexes stay
+        ``(None, stride-of-first-map)``.  A node fused from several ops
+        can touch the same buffer with complementary maps (e.g. a copy
+        indexing axis 0 and a compute op indexing axis 1) — returning the
+        first op's map wholesale would hide every later op's dims from
+        plan projection and the connection analysis (the same first-owner
+        hazard class ``project_rules`` had across *nodes*)."""
+        maps = [o.access[value] for o in self.body if value in o.access]
+        if not maps:
+            return None
+        first = maps[0]
+        if len(maps) == 1:
+            return first
+        rank = max(len(m.entries) for m in maps)
+        entries = []
+        for axis in range(rank):
+            chosen = None
+            for m in maps:
+                if axis < len(m.entries) and m.entries[axis][0] is not None:
+                    chosen = m.entries[axis]
+                    break
+            if chosen is None:
+                chosen = (first.entries[axis] if axis < len(first.entries)
+                          else (None, Fraction(1)))
+            entries.append(chosen)
+        merged = tuple(entries)
+        return first if merged == first.entries else AccessMap(merged)
 
 
 def topo_order_over(nodes: Sequence["Node"],
@@ -563,7 +591,14 @@ def topo_order_over(nodes: Sequence["Node"],
     """Stable topological order of ``nodes`` over ``edges`` — the shared
     walk behind :meth:`Schedule.topo_order` and the rewrite session's
     in-flight queries (which run it over Δ-maintained edges instead of
-    rebuilding the schedule topology)."""
+    rebuilding the schedule topology).
+
+    O(V + E log E): a name→node map and per-node successor lists sorted
+    by node position replace the former all-nodes rescan per pop, while
+    visiting successors in exactly the node-list order the rescan did —
+    the emitted order is unchanged."""
+    by_name = {n.name: n for n in nodes}
+    pos = {n.name: i for i, n in enumerate(nodes)}
     succ: dict[str, set[str]] = {n.name: set() for n in nodes}
     indeg: dict[str, int] = {n.name: 0 for n in nodes}
     for s, d, _ in edges:
@@ -571,15 +606,14 @@ def topo_order_over(nodes: Sequence["Node"],
             succ[s].add(d)
             indeg[d] += 1
     order: list[Node] = []
-    ready = [n for n in nodes if indeg[n.name] == 0]
+    ready = deque(n for n in nodes if indeg[n.name] == 0)
     while ready:
-        n = ready.pop(0)
+        n = ready.popleft()
         order.append(n)
-        for m in nodes:
-            if m.name in succ[n.name]:
-                indeg[m.name] -= 1
-                if indeg[m.name] == 0:
-                    ready.append(m)
+        for m in sorted(succ[n.name], key=pos.__getitem__):
+            indeg[m] -= 1
+            if indeg[m] == 0:
+                ready.append(by_name[m])
     if len(order) != len(nodes):
         raise ValueError(f"schedule {name} has a dataflow cycle")
     return order

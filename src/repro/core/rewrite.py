@@ -11,10 +11,14 @@ signature mismatch and re-index from scratch.  Now:
 
 * :class:`GraphRewriteSession` wraps a :class:`~repro.core.ir.Graph` and
   owns the fusion-facing view of :class:`~repro.core.ir.GraphTopology`:
-  per-dispatch successor graphs, task rollups (produces / consumes /
-  intensity / leaf kinds), cycle queries — maintained in **O(Δ)** per
+  per-dispatch region indices (direct successor/predecessor graphs, an
+  incrementally-maintained transitive-closure reachability index, and
+  program-order ranks), task rollups (produces / consumes / intensity /
+  leaf kinds), adjacency / cycle queries — maintained in **O(Δ)** per
   :meth:`~GraphRewriteSession.fuse` / :meth:`~GraphRewriteSession.split`
-  (one region scan, not a quadratic rebuild per worklist step).
+  (one region scan plus closure-row updates for the tasks whose
+  reachability actually changed — never a DFS per query, never a
+  quadratic rebuild per worklist step).
 
 * :class:`ScheduleRewriteSession` wraps a
   :class:`~repro.core.ir.Schedule` and maintains the producer/consumer
@@ -47,11 +51,12 @@ schedule and topology bit-exactly.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Callable, Iterable, Optional, Sequence
 
 from .ir import (AccessMap, Buffer, Graph, GraphTopology, MemoryEffect, Node,
                  Op, Schedule, ScheduleTopology, TokenEdge, depth_map_over,
-                 fresh_name, make_task, topo_order_over)
+                 fresh_name, make_dispatch, make_task, topo_order_over)
 
 
 class RewriteError(RuntimeError):
@@ -130,23 +135,174 @@ def graph_topology_fingerprint(topo: GraphTopology, graph: Graph) -> dict:
 # Functional-level session
 # --------------------------------------------------------------------------
 
+def _bits(mask: int):
+    """Yield the set bit positions of ``mask`` (ascending)."""
+    while mask:
+        low = mask & -mask
+        yield low.bit_length() - 1
+        mask ^= low
+
+
+@dataclass
+class _RegionIndex:
+    """Maintained structure over one dispatch region's task graph.
+
+    ``succ`` / ``pred`` are the direct dataflow edges (a task feeds
+    another through some value); ``reach`` / ``rreach`` are the
+    transitive closure and its inverse (every task reachable via ≥1 edge
+    / every task that reaches the key) — the index behind
+    :meth:`GraphRewriteSession.creates_cycle`, which becomes two bitwise
+    ANDs instead of a DFS.
+
+    Rows are **bitmasks** (arbitrary-precision ints): each task owns a
+    bit position for the index's lifetime (merged tasks append new
+    bits), so a closure row of a 100-task region is two machine words
+    and the per-fuse row rewrites — the dominant maintenance cost with
+    set rows — are single ``(row & kill) | add`` expressions.  Bitmask
+    rows are also immutable, which makes the exact-rollback contract
+    free: undo logs store the previous int, nothing can alias.
+
+    Interval/ILP-style orders were considered and rejected: they answer
+    reachability in O(1) but cost O(region) relabelling per contraction,
+    while closure rows cost O(changed rows · words) and stay exact.
+
+    ``rank`` is a program-order rank: it respects the region list order
+    at all times (fusing assigns the merged task the lower of its
+    parents' ranks — exactly where the merged task lands in the region),
+    stays unique, and is *static* per task, so worklist structures keyed
+    on it (the balance phase's pair heap) never need re-keying as the
+    region list shifts.
+
+    All keys are ``id(task)`` (tasks are pinned by the session for the
+    index's lifetime); ``ops`` maps each live id back to its task and
+    doubles as the liveness set; ``by_bit`` maps bit positions back to
+    tasks (entries for fused-away tasks are stale — live rows never
+    reference a dead bit, the maintenance clears them)."""
+
+    ops: dict[int, Op]
+    bit: dict[int, int]
+    by_bit: list[Op]
+    succ: dict[int, int]
+    pred: dict[int, int]
+    reach: dict[int, int]
+    rreach: dict[int, int]
+    rank: dict[int, int]
+    #: bumped whenever reachability may have been *reduced* (the
+    #: vanished-edge fuse fallback, split) — pure contraction never bumps.
+    #: Worklists that cached a cycle verdict must reseed when it changes.
+    epoch: int = 0
+
+    def tasks(self, mask: int) -> list[Op]:
+        return [self.by_bit[b] for b in _bits(mask)]
+
+
+def _closure_rows(n: int, succ: list[int], pred: list[int]) -> tuple[
+        list[int], list[int]]:
+    """Transitive closure (and inverse) of the DAG given as per-position
+    successor/predecessor bitmask rows — one Kahn walk plus one OR per
+    edge.  Falls back to per-node DFS if the input has a cycle (cannot
+    happen for SSA-derived regions, but a query index must not
+    infinite-loop on degenerate input)."""
+    indeg = [pred[i].bit_count() for i in range(n)]
+    stack = [i for i in range(n) if indeg[i] == 0]
+    order: list[int] = []
+    while stack:
+        i = stack.pop()
+        order.append(i)
+        for j in _bits(succ[i]):
+            indeg[j] -= 1
+            if indeg[j] == 0:
+                stack.append(j)
+    reach = [0] * n
+    rreach = [0] * n
+    if len(order) == n:
+        for i in reversed(order):
+            r = 0
+            for j in _bits(succ[i]):
+                r |= (1 << j) | reach[j]
+            reach[i] = r
+        for i in order:
+            rr = 0
+            for j in _bits(pred[i]):
+                rr |= (1 << j) | rreach[j]
+            rreach[i] = rr
+    else:
+        for i in range(n):
+            seen = 0
+            work = succ[i]
+            while work:
+                low = work & -work
+                j = low.bit_length() - 1
+                work ^= low
+                if not seen >> j & 1:
+                    seen |= low
+                    work |= succ[j] & ~seen
+            reach[i] = seen & ~(1 << i)
+        for i in range(n):
+            for j in _bits(reach[i]):
+                rreach[j] |= 1 << i
+    return reach, rreach
+
+
+def _build_region_index(topo: GraphTopology, d: Op) -> _RegionIndex:
+    """From-scratch index for dispatch ``d`` — built once per dispatch,
+    then maintained across fuses (O(region² + region·edges), paid one
+    time)."""
+    region = list(d.region)
+    n = len(region)
+    prods = [topo.produces(t) for t in region]
+    cons = [topo.consumes(t) for t in region]
+    succ = [0] * n
+    pred = [0] * n
+    for i in range(n):
+        row = 0
+        for j in range(n):
+            if i != j and prods[i] & cons[j]:
+                row |= 1 << j
+                pred[j] |= 1 << i
+        succ[i] = row
+    reach, rreach = _closure_rows(n, succ, pred)
+    ids = [id(t) for t in region]
+    return _RegionIndex(
+        ops=dict(zip(ids, region)),
+        bit=dict(zip(ids, range(n))),
+        by_bit=list(region),
+        succ=dict(zip(ids, succ)), pred=dict(zip(ids, pred)),
+        reach=dict(zip(ids, reach)), rreach=dict(zip(ids, rreach)),
+        rank=dict(zip(ids, range(n))))
+
+
+def region_index_fingerprint(idx: _RegionIndex) -> dict:
+    """Name-based content of a :class:`_RegionIndex` (exact-rollback
+    tests compare these across a mutate → rollback round trip)."""
+    def rows(d: dict[int, int]) -> dict:
+        return {idx.ops[k].name: frozenset(t.name for t in idx.tasks(v))
+                for k, v in d.items()}
+
+    return {"succ": rows(idx.succ), "pred": rows(idx.pred),
+            "reach": rows(idx.reach), "rreach": rows(idx.rreach),
+            "rank": {idx.ops[k].name: r for k, r in idx.rank.items()},
+            "bits": {idx.ops[k].name: b for k, b in idx.bit.items()}}
+
+
 class GraphRewriteSession:
     """Transactional rewrites over a Functional :class:`Graph`.
 
-    The fusion pass (Alg. 2) drives its whole worklist through this:
-    adjacency / cycle queries against a per-dispatch successor graph that
+    The construction pass (Alg. 1) and the fusion pass (Alg. 2) drive
+    their whole worklists through this: adjacency and cycle queries run
+    against a per-dispatch :class:`_RegionIndex` (direct edges + an
+    incrementally-maintained transitive-closure reachability index) that
     is built once per dispatch and then **maintained** across
-    :meth:`fuse` calls (one O(region) rescan of the merged task's row and
-    column — never the O(region²) full rebuild the old ``_RegionIndex``
-    paid per worklist step), and rollups served from the shared
+    :meth:`fuse` calls — ``creates_cycle`` is two C-level set
+    intersections, never a DFS — and rollups are served from the shared
     :class:`GraphTopology` memos."""
 
     def __init__(self, graph: Graph, selfcheck: bool = False):
         self.graph = graph
         self._base = graph.topology()
         self._parent = dict(self._base.parent)
-        #: id(dispatch) -> {id(task) -> set of successor task ids}
-        self._succ: dict[int, dict[int, set[int]]] = {}
+        #: id(dispatch) -> maintained region index
+        self._regions: dict[int, _RegionIndex] = {}
         self._pins: list[Op] = []
         self._undo: list[Callable[[], None]] = []
         self._canonicalized = False
@@ -182,6 +338,11 @@ class GraphRewriteSession:
             return None
         sig = g.structure_signature()
         base = self._base
+        # Ops created mid-session (merged/wrapper tasks) join the pin
+        # list even when a later rewrite removed them from the tree:
+        # their ids key _parent entries, and a recycled id would alias a
+        # stale parent onto a future op.
+        base._pins.extend(self._pins)
         if sig == base.signature:
             g._topology = base
             return base
@@ -229,46 +390,94 @@ class GraphRewriteSession:
     def leaf_meta(self, t: Op) -> tuple[Optional[str], frozenset]:
         return self._base.leaf_meta(t)
 
-    def _ensure_region(self, d: Op) -> dict[int, set[int]]:
-        succ = self._succ.get(id(d))
-        if succ is None:
-            topo = self._base
-            region = list(d.region)
-            prods = [topo.produces(t) for t in region]
-            cons = [topo.consumes(t) for t in region]
-            succ = {}
-            for i, a in enumerate(region):
-                succ[id(a)] = {id(b) for j, b in enumerate(region)
-                               if i != j and prods[i] & cons[j]}
-            self._succ[id(d)] = succ
-            self._pins.extend(region)
+    def _ensure_region(self, d: Op) -> _RegionIndex:
+        if self._canonicalized:
+            raise RewriteError(
+                "region queries are invalid after canonicalize() — the "
+                "maintained indices no longer describe the tree")
+        idx = self._regions.get(id(d))
+        if idx is None:
+            idx = _build_region_index(self._base, d)
+            self._regions[id(d)] = idx
+            self._pins.extend(d.region)
             self._pins.append(d)
-        return succ
+        return idx
 
     def adjacent(self, d: Op, a: Op, b: Op) -> bool:
         """True when a feeds b or b feeds a through any value."""
-        succ = self._ensure_region(d)
-        return id(b) in succ[id(a)] or id(a) in succ[id(b)]
+        idx = self._ensure_region(d)
+        return bool(idx.succ[id(a)] >> idx.bit[id(b)] & 1
+                    or idx.succ[id(b)] >> idx.bit[id(a)] & 1)
+
+    def adjacent_pairs(self, d: Op) -> list[tuple[Op, Op]]:
+        """Every adjacent task pair of dispatch ``d``, one entry per
+        unordered pair (the region graph is a DAG, so each pair has at
+        most one direct edge) — the balance phase's seed worklist,
+        enumerated in O(edges)."""
+        idx = self._ensure_region(d)
+        return [(idx.ops[sid], t)
+                for sid, row in idx.succ.items() for t in idx.tasks(row)]
+
+    def neighbors(self, d: Op, t: Op) -> list[Op]:
+        """Tasks adjacent to ``t`` (either direction), deduplicated."""
+        idx = self._ensure_region(d)
+        tid = id(t)
+        return idx.tasks(idx.succ[tid] | idx.pred[tid])
+
+    def neighbors_in_order(self, d: Op, t: Op) -> list[Op]:
+        """:meth:`neighbors` sorted by region program order — what a
+        candidate scan over ``d.region`` would visit, without the
+        O(region) walk."""
+        idx = self._ensure_region(d)
+        tid = id(t)
+        out = idx.tasks(idx.succ[tid] | idx.pred[tid])
+        out.sort(key=lambda u: idx.rank[id(u)])
+        return out
+
+    def alive(self, d: Op, t: Op) -> bool:
+        """True while ``t`` is a live task of dispatch ``d`` (not yet
+        fused away) — O(1), for lazily-invalidated worklist entries."""
+        return id(t) in self._ensure_region(d).ops
+
+    def region_epoch(self, d: Op) -> int:
+        """Bumped whenever ``d``'s reachability may have been *reduced*
+        (the vanished-edge fuse fallback, :meth:`split`); unchanged by
+        pure contraction.  A worklist that permanently discarded a
+        cycle-creating pair (legal under contraction, where paths only
+        ever appear) must reseed when this changes."""
+        return self._ensure_region(d).epoch
+
+    def rank(self, d: Op, t: Op) -> int:
+        """Program-order rank of ``t`` in ``d``'s region: respects the
+        region list order at all times and is static per task (a merged
+        task inherits the lower parent rank — its region position), so
+        heap keys built from it never go stale."""
+        return self._ensure_region(d).rank[id(t)]
+
+    def order(self, d: Op, a: Op, b: Op) -> tuple[Op, Op]:
+        """``(a, b)`` sorted by region program order (rank-served — the
+        O(region) ``list.index`` scan the passes used to pay)."""
+        idx = self._ensure_region(d)
+        return (a, b) if idx.rank[id(a)] <= idx.rank[id(b)] else (b, a)
 
     def creates_cycle(self, d: Op, a: Op, b: Op) -> bool:
         """Fusing a and b is illegal when a third task sits on a dataflow
         path between them (the merged task would both feed and consume
         it).  This matters for decode graphs: qkv → cache-update →
         attention must not fuse qkv with attention around the
-        cache-update node."""
-        succ = self._ensure_region(d)
-        for src, dst in ((id(a), id(b)), (id(b), id(a))):
-            seen: set[int] = set()
-            stack = [n for n in succ[src] if n != dst]
-            while stack:
-                n = stack.pop()
-                if n in seen:
-                    continue
-                seen.add(n)
-                if dst in succ[n]:
-                    return True
-                stack.extend(m for m in succ[n] if m != dst)
-        return False
+        cache-update node.
+
+        Served by the maintained reachability index: a third task sits
+        between a and b iff ``reach(a) ∩ rreach(b)`` (or the mirror) is
+        non-empty — two bitwise ANDs, no DFS.  While both tasks live the
+        status is monotone *under pure contraction* (fusing other pairs
+        only adds paths), so a ``True`` answer may be cached as long as
+        :meth:`region_epoch` is unchanged; the vanished-edge fallback and
+        :meth:`split` can remove paths and bump the epoch."""
+        idx = self._ensure_region(d)
+        ia, ib = id(a), id(b)
+        return bool(idx.reach[ia] & idx.rreach[ib]
+                    or idx.reach[ib] & idx.rreach[ia])
 
     def _invalidate_ancestors(self, d: Op) -> None:
         """Drop the rollup memos of ``d`` and every enclosing region op:
@@ -291,10 +500,14 @@ class GraphRewriteSession:
         """Fuse two tasks of one dispatch region into a new task,
         preserving program order (transparent regions make this a pure
         re-wrap).  The merged task's rollups come from O(1) set algebra
-        over the memoized operands; its successor row/column are rescanned
-        in one O(region) pass, everything else is untouched."""
+        over the memoized operands; the region index is maintained in
+        O(Δ): direct edges are re-derived in one O(region) pass, and only
+        the closure rows of tasks whose reachability actually changed
+        (the merged task's ancestors and descendants) are rewritten.
+        Every touched row's previous value is logged for an exact
+        inverse, so rollback restores the index bit-for-bit."""
         self._check_open()
-        succ = self._ensure_region(d)
+        idx = self._ensure_region(d)
         region = d.region
         ia, ib = _index_identical(region, a), _index_identical(region, b)
         first, second = (a, b) if ia <= ib else (b, a)
@@ -306,22 +519,95 @@ class GraphRewriteSession:
 
         topo = self._base
         topo.note_fusion(merged, first, second)
-        mid = id(merged)
-        mprod, mcons = topo.produces(merged), topo.consumes(merged)
-        out: set[int] = set()
-        for t in region:
-            if t is merged:
-                continue
-            row = succ[id(t)]
-            row.discard(id(first))
-            row.discard(id(second))
-            if topo.produces(t) & mcons:
-                row.add(mid)
-            if mprod & topo.consumes(t):
-                out.add(id(t))
-        succ.pop(id(first), None)
-        succ.pop(id(second), None)
-        succ[mid] = out
+        fid, sid, mid = id(first), id(second), id(merged)
+        mcons = topo.consumes(merged)
+        rank_first = idx.rank[fid]   # == min of the two: rank ≡ region order
+
+        # Fusion is edge *contraction* — almost.  Outgoing edges rename
+        # exactly (produces(m) is the full union), and no incoming edge
+        # appears from nowhere, but an edge into `second` through a value
+        # `first` also produces VANISHES (the value became region-internal
+        # to m, so m's live-ins drop it).  Detect that case by re-deriving
+        # m's true predecessors from the rollups; when an edge vanished,
+        # the incremental closure formula is invalid and the index is
+        # rebuilt (rare: it needs a multi-produced Functional value).
+        bf, bs = idx.bit[fid], idx.bit[sid]
+        kill = ~((1 << bf) | (1 << bs))
+        succ_m = (idx.succ[fid] | idx.succ[sid]) & kill
+        pred_renamed = (idx.pred[fid] | idx.pred[sid]) & kill
+        pred_m = 0
+        for pos in _bits(pred_renamed):
+            if topo.produces(idx.by_bit[pos]) & mcons:
+                pred_m |= 1 << pos
+
+        if pred_m == pred_renamed:
+            # Pure contraction: maintain in O(Δ).  Rows are ints —
+            # immutable — so the undo log just keeps the previous value;
+            # only rows incident to m's ancestors / descendants change.
+            bm = len(idx.by_bit)
+            idx.by_bit.append(merged)
+            add_m = 1 << bm
+            old_rows: list[tuple[dict, int, int]] = []
+            reach_m = (idx.reach[fid] | idx.reach[sid]) & kill
+            rreach_m = (idx.rreach[fid] | idx.rreach[sid]) & kill
+            for pos in _bits(pred_m):
+                tid = id(idx.by_bit[pos])
+                old_rows.append((idx.succ, tid, idx.succ[tid]))
+                idx.succ[tid] = (idx.succ[tid] & kill) | add_m
+            for pos in _bits(succ_m):
+                tid = id(idx.by_bit[pos])
+                old_rows.append((idx.pred, tid, idx.pred[tid]))
+                idx.pred[tid] = (idx.pred[tid] & kill) | add_m
+            add_reach = add_m | reach_m
+            for pos in _bits(rreach_m):
+                tid = id(idx.by_bit[pos])
+                old_rows.append((idx.reach, tid, idx.reach[tid]))
+                idx.reach[tid] = (idx.reach[tid] & kill) | add_reach
+            add_rreach = add_m | rreach_m
+            for pos in _bits(reach_m):
+                tid = id(idx.by_bit[pos])
+                old_rows.append((idx.rreach, tid, idx.rreach[tid]))
+                idx.rreach[tid] = (idx.rreach[tid] & kill) | add_rreach
+            popped: list[tuple[dict, int, object]] = []
+            for table in (idx.succ, idx.pred, idx.reach, idx.rreach,
+                          idx.rank, idx.ops, idx.bit):
+                for tid in (fid, sid):
+                    popped.append((table, tid, table.pop(tid)))
+            idx.succ[mid] = succ_m
+            idx.pred[mid] = pred_m
+            idx.reach[mid] = reach_m
+            idx.rreach[mid] = rreach_m
+            # The merged task replaces `first` in the region list, so it
+            # inherits first's rank — order-consistency and uniqueness
+            # hold, and heap keys built from older ranks stay coherent.
+            idx.rank[mid] = rank_first
+            idx.ops[mid] = merged
+            idx.bit[mid] = bm
+
+            def undo_index() -> None:
+                for table in (idx.succ, idx.pred, idx.reach, idx.rreach,
+                              idx.rank, idx.ops, idx.bit):
+                    table.pop(mid, None)
+                del idx.by_bit[bm]
+                for table, tid, row in old_rows:
+                    table[tid] = row
+                for table, tid, val in popped:
+                    table[tid] = val
+        else:
+            # A vanished edge invalidated closure deltas: rebuild, but
+            # preserve the maintained ranks (heap keys outlive this call).
+            # Losing an edge can also *remove* reachability, so cycle
+            # verdicts cached by worklists are stale — bump the epoch.
+            old_idx = idx
+            idx = _build_region_index(topo, d)
+            idx.rank = {tid: (rank_first if tid == mid
+                              else old_idx.rank[tid])
+                        for tid in idx.ops}
+            idx.epoch = old_idx.epoch + 1
+            self._regions[id(d)] = idx
+
+            def undo_index() -> None:
+                self._regions[id(d)] = old_idx
 
         self._parent[mid] = d
         for c in merged.region:
@@ -331,19 +617,24 @@ class GraphRewriteSession:
 
         def undo() -> None:
             region[:] = old_region
+            undo_index()
         self._undo.append(undo)
         self._after()
         return merged
 
     def split(self, d: Op, task: Op, at: int) -> tuple[Op, Op]:
         """Split ``task`` (a region op of dispatch ``d``) into two tasks
-        at child index ``at`` — the inverse of :meth:`fuse`.  Successor
-        rows for the two halves are rescanned in one O(region) pass."""
+        at child index ``at`` — the inverse of :meth:`fuse`.  Splitting
+        can *sever* reachability (paths through the merged task may not
+        exist through either half), which no closure delta expresses
+        cheaply, so the region index is rebuilt (ranks reset to the
+        current region order); split is an API-completeness primitive,
+        not a worklist step — no pass splits mid-heap."""
         self._check_open()
         if not 0 < at < len(task.region):
             raise RewriteError(f"split index {at} out of range for "
                                f"{task.name} ({len(task.region)} children)")
-        succ = self._ensure_region(d)
+        old_idx = self._ensure_region(d)
         region = d.region
         i = _index_identical(region, task)
         head = make_task(list(task.region[:at]))
@@ -351,38 +642,67 @@ class GraphRewriteSession:
         old_region = list(region)
         region[i:i + 1] = [head, tail]
 
-        topo = self._base
-        succ.pop(id(task), None)
         for part in (head, tail):
             self._parent[id(part)] = d
             for c in part.region:
                 self._parent[id(c)] = part
             self._pins.append(part)
-        for part in (head, tail):
-            pprod, pcons = topo.produces(part), topo.consumes(part)
-            row: set[int] = set()
-            for t in region:
-                if t is part:
-                    continue
-                if pprod & topo.consumes(t):
-                    row.add(id(t))
-            succ[id(part)] = row
-        for t in region:
-            if t is head or t is tail:
-                continue
-            row = succ[id(t)]
-            row.discard(id(task))
-            tprod = topo.produces(t)
-            for part in (head, tail):
-                if tprod & topo.consumes(part):
-                    row.add(id(part))
+        new_idx = _build_region_index(self._base, d)
+        new_idx.epoch = old_idx.epoch + 1   # reachability may have shrunk
+        self._regions[id(d)] = new_idx
         self._invalidate_ancestors(d)
 
         def undo() -> None:
             region[:] = old_region
+            self._regions[id(d)] = old_idx
         self._undo.append(undo)
         self._after()
         return head, tail
+
+    def wrap_dispatch(self, owner: Optional[Op]) -> Op:
+        """Construction primitive (paper Alg. 1): wrap every op of
+        ``owner``'s region (or the graph's top level when ``owner`` is
+        None) into its own ``task`` — existing tasks/dispatches pass
+        through — and the whole list into one ``dispatch`` that replaces
+        the region's content.
+
+        Leaf ops are untouched, so the value→op indices stay valid
+        verbatim; only the parent map grows (O(wrapped) new entries).
+        That is what lets ``construct_functional`` run transactionally
+        *and* hand the fusion pass a warm topology at commit instead of
+        forcing the full rebuild the pre-session construct pass caused."""
+        self._check_open()
+        if self._canonicalized:
+            raise RewriteError("wrap_dispatch after canonicalize()")
+        container = owner.region if owner is not None else self.graph.ops
+        old = list(container)
+        tasks = [o if o.kind in ("task", "dispatch") else make_task([o])
+                 for o in old]
+        d = make_dispatch(tasks)
+        container[:] = [d]
+
+        old_parents = {id(o): self._parent.get(id(o)) for o in old}
+        self._parent[id(d)] = owner
+        for t, o in zip(tasks, old):
+            self._parent[id(t)] = d
+            if t is not o:
+                self._parent[id(o)] = t
+        self._pins.append(d)
+        self._pins.extend(t for t, o in zip(tasks, old) if t is not o)
+        if owner is not None:
+            self._invalidate_ancestors(owner)
+
+        def undo() -> None:
+            container[:] = old
+            self._parent.pop(id(d), None)
+            for t, o in zip(tasks, old):
+                if t is not o:
+                    self._parent.pop(id(t), None)
+            for oid, par in old_parents.items():
+                self._parent[oid] = par
+        self._undo.append(undo)
+        self._after()
+        return d
 
     def canonicalize(self, fn: Callable[[Op], Op]) -> None:
         """Wholesale region-tree restructure (e.g.
@@ -444,9 +764,11 @@ class GraphRewriteSession:
                      if fresh.parent[id(o)] is not None else None)
             for o in g.walk()}
         assert maintained_parent == fresh_parent, "parent map drift"
-        # Successor graphs for every ensured dispatch still in the graph.
+        # Region indices for every ensured dispatch still in the graph:
+        # direct edges, the reachability closure (vs a from-scratch DFS),
+        # its inverse, and the program-order rank invariant.
         by_id = {id(o): o for o in g.walk()}
-        for did, succ in self._succ.items():
+        for did, idx in self._regions.items():
             d = by_id.get(did)
             if d is None or d.kind != "dispatch":
                 continue
@@ -456,8 +778,44 @@ class GraphRewriteSession:
                     id(b) for j, b in enumerate(d.region)
                     if i != j and frozenset(a.all_outs()) & frozenset(
                         b.all_ins())}
-            live_rows = {k: v & live for k, v in succ.items() if k in live}
-            assert live_rows == fresh_succ, f"succ drift in {d.name}"
+            assert set(idx.ops) == {id(t) for t in d.region}, \
+                f"live-task drift in {d.name}"
+
+            def ids_of(mask: int) -> set[int]:
+                return {id(t) for t in idx.tasks(mask)}
+
+            maintained_succ = {k: ids_of(v) for k, v in idx.succ.items()}
+            assert maintained_succ == fresh_succ, f"succ drift in {d.name}"
+            fresh_pred = {k: set() for k in fresh_succ}
+            for s, row in fresh_succ.items():
+                for t in row:
+                    fresh_pred[t].add(s)
+            maintained_pred = {k: ids_of(v) for k, v in idx.pred.items()}
+            assert maintained_pred == fresh_pred, f"pred drift in {d.name}"
+            fresh_reach = {}
+            for tid in fresh_succ:
+                seen: set[int] = set()
+                stack = list(fresh_succ[tid])
+                while stack:
+                    n = stack.pop()
+                    if n in seen:
+                        continue
+                    seen.add(n)
+                    stack.extend(fresh_succ[n])
+                seen.discard(tid)
+                fresh_reach[tid] = seen
+            maintained_reach = {k: ids_of(v) for k, v in idx.reach.items()}
+            assert maintained_reach == fresh_reach, f"reach drift in {d.name}"
+            fresh_rreach = {k: set() for k in fresh_reach}
+            for s, row in fresh_reach.items():
+                for t in row:
+                    fresh_rreach[t].add(s)
+            maintained_rreach = {k: ids_of(v) for k, v in idx.rreach.items()}
+            assert maintained_rreach == fresh_rreach, \
+                f"rreach drift in {d.name}"
+            ranks = [idx.rank[id(t)] for t in d.region]
+            assert ranks == sorted(ranks) and len(set(ranks)) == len(ranks), \
+                f"rank order drift in {d.name}"
 
 
 # --------------------------------------------------------------------------

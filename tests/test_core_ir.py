@@ -329,3 +329,130 @@ def test_estimate_produces_three_terms():
     assert cost.total_s > 0
     assert cost.critical_s <= cost.total_s
     assert cost.dominant in ("compute", "memory", "collective")
+
+
+# --------------------------------------------------------------------------
+# Node.access_for: merged across body ops (first-owner hazard regression)
+# --------------------------------------------------------------------------
+
+def test_access_for_merges_across_body_ops():
+    """Two body ops touching the same buffer with complementary maps: the
+    merged map must expose *both* ops' dims, not just the first op's
+    (returning the first body op's map wholesale silently replicated any
+    axis only a later op indexes — the hazard class PR 3 fixed across
+    nodes in project_rules, here within one node)."""
+    op1 = Op(name="o1", kind="copy", ins=["b"], outs=[],
+             loop_dims={"i": 8},
+             access={"b": AccessMap.of(("i", 1), (None, 1))})
+    op2 = Op(name="o2", kind="compute", ins=["b"], outs=[],
+             loop_dims={"j": 8},
+             access={"b": AccessMap.of((None, 1), ("j", 1))})
+    n = Node(name="n", args={"b": MemoryEffect.READ}, body=[op1, op2])
+    am = n.access_for("b")
+    assert am.entries == (("i", Fraction(1)), ("j", Fraction(1)))
+
+
+def test_access_for_conflicting_axis_earliest_op_wins():
+    """When two body ops name *different* dims at the same axis the
+    earliest body op wins — the deterministic conflict policy (matching
+    the old behaviour whenever the first op's map was total)."""
+    op1 = Op(name="o1", kind="compute", ins=["b"], outs=[],
+             loop_dims={"i": 8},
+             access={"b": AccessMap.of(("i", 2), (None, 1))})
+    op2 = Op(name="o2", kind="compute", ins=["b"], outs=[],
+             loop_dims={"k": 8, "j": 8},
+             access={"b": AccessMap.of(("k", 1), ("j", 1))})
+    n = Node(name="n", args={"b": MemoryEffect.READ}, body=[op1, op2])
+    am = n.access_for("b")
+    assert am.entries == (("i", Fraction(2)), ("j", Fraction(1)))
+    # Single-map nodes return the map object itself (no copy).
+    n_single = Node(name="m", args={"b": MemoryEffect.READ}, body=[op1])
+    assert n_single.access_for("b") is op1.access["b"]
+    assert n_single.access_for("missing") is None
+
+
+# --------------------------------------------------------------------------
+# topo_order_over: order-preserving de-quadratification
+# --------------------------------------------------------------------------
+
+def _reference_topo_order(nodes, edges, name=""):
+    """The pre-optimization O(V²) implementation, kept verbatim as the
+    order oracle."""
+    succ = {n.name: set() for n in nodes}
+    indeg = {n.name: 0 for n in nodes}
+    for s, d, _ in edges:
+        if d not in succ[s]:
+            succ[s].add(d)
+            indeg[d] += 1
+    order = []
+    ready = [n for n in nodes if indeg[n.name] == 0]
+    while ready:
+        n = ready.pop(0)
+        order.append(n)
+        for m in nodes:
+            if m.name in succ[n.name]:
+                indeg[m.name] -= 1
+                if indeg[m.name] == 0:
+                    ready.append(m)
+    if len(order) != len(nodes):
+        raise ValueError(f"schedule {name} has a dataflow cycle")
+    return order
+
+
+def test_topo_order_matches_reference_on_real_schedule():
+    from repro.core.ir import topo_order_over
+    from repro.configs import SHAPES, get_config
+    from repro.core import build_lm_graph
+    from repro.core.balance import balance_paths
+    from repro.core.multi_producer import eliminate_multi_producers
+
+    g = build_lm_graph(get_config("smollm-135m"), SHAPES["train_4k"])
+    construct_functional(g)
+    fuse_tasks(g)
+    sched = lower_to_structural(g)
+    eliminate_multi_producers(sched)
+    balance_paths(sched)
+    got = [n.name for n in topo_order_over(sched.nodes, sched.edges())]
+    want = [n.name for n in _reference_topo_order(sched.nodes,
+                                                  sched.edges())]
+    assert got == want
+    assert [n.name for n in sched.topo_order()] == want
+
+
+def test_topo_order_matches_reference_on_diamond():
+    from repro.core.ir import topo_order_over
+
+    nodes = [Node(name=f"n{i}") for i in range(6)]
+    # diamond + straggler with mixed insertion order
+    edges = [("n0", "n2", "a"), ("n0", "n1", "b"), ("n1", "n3", "c"),
+             ("n2", "n3", "d"), ("n3", "n4", "e"), ("n0", "n4", "f"),
+             ("n5", "n1", "g")]
+    got = [n.name for n in topo_order_over(nodes, edges)]
+    want = [n.name for n in _reference_topo_order(nodes, edges)]
+    assert got == want
+
+
+def test_topo_order_scales_linearly_on_long_chain():
+    """5k-node chain: the rewritten walk is O(V + E log E) and finishes
+    in milliseconds; the former per-pop all-nodes rescan took several
+    seconds at this size, so the generous 2 s bound is a real regression
+    tripwire, not timing noise."""
+    import time
+    from repro.core.ir import topo_order_over
+
+    n = 5000
+    nodes = [Node(name=f"c{i}") for i in range(n)]
+    edges = [(f"c{i}", f"c{i+1}", f"b{i}") for i in range(n - 1)]
+    t0 = time.perf_counter()
+    order = topo_order_over(nodes, edges)
+    assert time.perf_counter() - t0 < 2.0
+    assert [x.name for x in order] == [f"c{i}" for i in range(n)]
+
+
+def test_topo_order_still_raises_on_cycle():
+    from repro.core.ir import topo_order_over
+
+    nodes = [Node(name="a"), Node(name="b")]
+    edges = [("a", "b", "x"), ("b", "a", "y")]
+    with pytest.raises(ValueError, match="cycle"):
+        topo_order_over(nodes, edges, "cyc")

@@ -90,10 +90,12 @@ def test_final_plan_matches_golden_full(arch):
 @pytest.mark.parametrize("arch", PROPERTY_ARCHS)
 def test_selfcheck_sweep_over_pass_traces(arch):
     """Run the real pass pipeline with per-rewrite selfchecks: after every
-    fuse / rename / insert / retire in the worklist traces, the maintained
-    topology must equal a fresh build (the assert lives inside the
-    session).  Also checks the pipeline output is unchanged by selfcheck
-    mode itself."""
+    wrap / fuse / rename / insert / retire in the worklist traces, the
+    maintained topology — including the per-dispatch reachability index
+    (direct edges, transitive closure, inverse closure, rank order) —
+    must equal a fresh build / from-scratch DFS closure (the asserts live
+    inside the session).  Also checks the pipeline output is unchanged by
+    selfcheck mode itself."""
     from repro.configs import SHAPES, get_config
     from repro.core import build_lm_graph
     from repro.core.balance import balance_paths
@@ -101,7 +103,7 @@ def test_selfcheck_sweep_over_pass_traces(arch):
 
     reset_fresh_names()
     g = build_lm_graph(get_config(arch), SHAPES["train_4k"])
-    construct_functional(g)
+    construct_functional(g, selfcheck=True)
     fuse_tasks(g, selfcheck=True)
     sched = lower_to_structural(g, selfcheck=True)
     eliminate_multi_producers(sched, selfcheck=True)
@@ -358,6 +360,88 @@ def test_graph_rollback_drops_stale_rollup_memos():
     assert g.topology().intensity(d) == d.intensity()
 
 
+def _fusable_pair(rs, d):
+    """First adjacent, non-cycle-creating pair — what a legal worklist
+    step would fuse."""
+    for a, b in rs.adjacent_pairs(d):
+        if not rs.creates_cycle(d, a, b):
+            return a, b
+    raise RuntimeError(f"no fusable pair in {d.name}")
+
+
+def test_reach_index_exact_rollback_on_midpass_exception():
+    """The reachability index is restored bit-exactly by rollback: every
+    fuse logs the previous row values, and undoing the rewrites in
+    reverse leaves the per-dispatch index (succ/pred, closure, inverse
+    closure, ranks, bit assignments) equal to its pre-mutation state —
+    no matter how deep into the worklist the pass died."""
+    from repro.core.rewrite import region_index_fingerprint
+
+    g = _fused_graph("xlstm-125m")
+    rs = GraphRewriteSession(g, selfcheck=True)
+    d = next(op for op in g.walk() if op.kind == "dispatch")
+    idx = rs._ensure_region(d)
+    before = region_index_fingerprint(idx)
+    for _ in range(3):
+        a, b = _fusable_pair(rs, d)
+        rs.fuse(d, a, b)
+    assert region_index_fingerprint(idx) != before    # genuinely mutated
+    rs.rollback()
+    assert region_index_fingerprint(idx) == before
+
+
+def test_reach_index_exact_rollback_via_context_manager():
+    """Same contract when a pass dies mid-worklist inside ``with``."""
+    from repro.core.rewrite import region_index_fingerprint
+
+    g = _fused_graph("smollm-135m")
+    before_sig = g.structure_signature()
+    captured = {}
+
+    class Boom(Exception):
+        pass
+
+    with pytest.raises(Boom):
+        with GraphRewriteSession(g, selfcheck=True) as rs:
+            d = next(op for op in g.walk() if op.kind == "dispatch")
+            captured["idx"] = rs._ensure_region(d)
+            captured["before"] = region_index_fingerprint(captured["idx"])
+            rs.fuse(d, *_fusable_pair(rs, d))
+            raise Boom()
+    assert g.structure_signature() == before_sig
+    assert region_index_fingerprint(captured["idx"]) == captured["before"]
+
+
+def test_region_queries_raise_after_canonicalize():
+    """The maintained region indices no longer describe the tree after a
+    wholesale canonicalize; querying them must fail loudly, not answer
+    from stale structure."""
+    from repro.core.fusion import simplify_hierarchy
+
+    g = _fused_graph()
+    rs = GraphRewriteSession(g)
+    d = next(op for op in g.walk() if op.kind == "dispatch")
+    a, b = d.region[0], d.region[1]
+    rs.canonicalize(simplify_hierarchy)
+    with pytest.raises(RewriteError):
+        rs.adjacent(d, a, b)
+    rs.rollback()
+
+
+def test_balance_tie_break_deterministic_across_runs():
+    """The balance phase's pair heap breaks combined-intensity ties by
+    the session's program-order ranks — explicitly, not by whatever
+    order an enumeration produced.  Repeated-layer LMs have many exact
+    intensity ties, so two runs agreeing bit-for-bit (on top of the
+    pinned goldens) is the determinism evidence for the heap rewrite."""
+    first = build_pre_dse_schedule("stablelm-3b").to_json()
+    second = build_pre_dse_schedule("stablelm-3b").to_json()
+    assert first == second
+    plan_a = build_final_plan("smollm-135m").to_json()
+    plan_b = build_final_plan("smollm-135m").to_json()
+    assert plan_a == plan_b
+
+
 def test_fusion_exception_leaves_graph_untouched():
     """A pass aborting mid-worklist must not leave the graph half-fused."""
     g = _fused_graph()
@@ -498,3 +582,123 @@ def test_apply_stages_all_or_nothing():
         apply_stages(s, {"n0": 1, "ghost": 2, "n2": 3})
     # Nothing half-applied: every node still at its initial stage.
     assert [n.stage for n in s.nodes] == [0, 0, 0]
+
+
+# --------------------------------------------------------------------------
+# 5. Bench gate: fuse_s regressions fail --compare on their own
+# --------------------------------------------------------------------------
+
+def test_compile_time_gate_fails_on_fuse_regression():
+    """The --compare gate must catch a fusion-pass slide (back toward the
+    O(n²·DFS) balance phase) even when it hides under the pre-DSE and
+    wall-time noise guards."""
+    from benchmarks.bench_compile_time import FUSE_MIN_DELTA_S, compare
+
+    base = {"arm": {"wall_s": 1.0, "total_s": 1.0,
+                    "pre_dse_s": 0.030, "fuse_s": 0.020}}
+    crept = {"arm": {"wall_s": 1.0, "total_s": 1.0,
+                     "pre_dse_s": 0.070, "fuse_s": 0.060}}
+    failures = compare(crept, base, threshold=2.0, min_delta_s=0.25)
+    assert any("fusion pass time" in f for f in failures), failures
+    # Millisecond jitter below the absolute guard never gates.
+    jitter = {"arm": {"wall_s": 1.0, "total_s": 1.0,
+                      "pre_dse_s": 0.031,
+                      "fuse_s": 0.020 + FUSE_MIN_DELTA_S * 0.9}}
+    assert compare(jitter, base, threshold=2.0, min_delta_s=0.25) == []
+
+
+# --------------------------------------------------------------------------
+# 6. Vanished-edge fallback: reachability can shrink; worklists must reseed
+# --------------------------------------------------------------------------
+
+def _multi_produced_graph():
+    """Region where value ``v`` has two producers (X and F): fusing F+S
+    makes v internal to the merged task, so the X→S edge *vanishes* —
+    the one fuse shape that removes reachability instead of contracting
+    it.  Pre-fuse, (A, B) is blocked by the path A→X→S→B; post-fuse it
+    is legal."""
+    from repro.core import build_lm_graph  # noqa: F401  (path setup)
+    from repro.core.ir import Graph
+
+    g = Graph("multi_v")
+    g.tensor("x", (8,), dims=("i",), is_input=True)
+    for name in ("a1", "v", "s1", "b1", "c1"):
+        g.tensor(name, (8,), dims=("i",))
+    g.op("scan", ["x"], ["a1"], {"i": 8}, flops=1, name="A")
+    g.op("scan", ["a1"], ["v"], {"i": 8}, flops=50, name="X")
+    g.op("scan", ["x"], ["v"], {"i": 8}, flops=5, name="F")
+    g.op("scan", ["v"], ["s1"], {"i": 8}, flops=5, name="S")
+    g.op("scan", ["a1", "s1"], ["b1"], {"i": 8}, flops=8, name="B")
+    g.op("scan", ["x"], ["c1"], {"i": 8}, flops=2000, name="C")
+    g.outputs = ["b1", "c1"]
+    return g
+
+
+def test_vanished_edge_fuse_bumps_epoch_and_unblocks_pair():
+    g = _multi_produced_graph()
+    construct_functional(g)
+    rs = GraphRewriteSession(g, selfcheck=True)
+    d = next(op for op in g.walk() if op.kind == "dispatch")
+    task_of = {t.region[0].name: t for t in d.region}
+    a, b = task_of["A"], task_of["B"]
+    f, s = task_of["F"], task_of["S"]
+    assert rs.creates_cycle(d, a, b)          # blocked via A→X→S→B
+    epoch = rs.region_epoch(d)
+    rs.fuse(d, f, s)                          # v becomes internal: X→S gone
+    assert rs.region_epoch(d) == epoch + 1    # reachability shrank
+    assert not rs.creates_cycle(d, a, b)      # (A, B) is legal now
+    rs.rollback()
+    assert rs.region_epoch(d) == epoch        # rollback restores the index
+
+
+def test_balance_reseeds_after_vanished_edge_matches_enumeration():
+    """The heap discards cycle-creating pairs permanently (sound under
+    pure contraction); after a vanished-edge fuse it must reseed, or the
+    unblocked (A, B) pair would never be fused — diverging from the old
+    per-step all-pairs enumeration.  Compare the full fusion output
+    against the enumeration oracle on the one graph shape that triggers
+    the fallback."""
+    import repro.core.fusion as fusion
+    from repro.core.lower import lower_to_structural
+
+    def oracle_balance(d, stats, rs, max_tasks=None):
+        # The pre-heap implementation, kept verbatim as the oracle.
+        while len(d.region) > 1:
+            crit = max(rs.intensity(t) for t in d.region)
+            pairs = [(a, b) for i, a in enumerate(d.region)
+                     for b in d.region[i + 1:]
+                     if rs.adjacent(d, a, b)
+                     and not rs.creates_cycle(d, a, b)]
+            forced = max_tasks is not None and len(d.region) > max_tasks
+            if not forced:
+                pairs = [(a, b) for a, b in pairs
+                         if min(rs.intensity(a), rs.intensity(b))
+                         <= fusion.LIGHT_FRACTION * crit]
+            if not pairs:
+                break
+            a, b = min(pairs, key=lambda p: rs.intensity(p[0])
+                       + rs.intensity(p[1]))
+            if rs.intensity(a) + rs.intensity(b) > crit and not forced:
+                break
+            merged = rs.fuse(d, a, b)
+            stats.balance_fusions += 1
+            stats.log.append(f"balance: {a.name}+{b.name}->{merged.name}")
+
+    def build(balance_fn):
+        saved = fusion._balance_phase
+        fusion._balance_phase = balance_fn
+        try:
+            reset_fresh_names()
+            g = _multi_produced_graph()
+            construct_functional(g)
+            stats = fusion.fuse_tasks(g, selfcheck=True)
+            return lower_to_structural(g).to_json(), stats
+        finally:
+            fusion._balance_phase = saved
+
+    want, want_stats = build(oracle_balance)
+    got, got_stats = build(fusion._balance_phase)
+    assert got == want
+    assert got_stats.log == want_stats.log
+    # The scenario really exercised the unblocking: A and B ended fused.
+    assert any("balance:" in line for line in got_stats.log)
