@@ -30,7 +30,10 @@ fuse_s + lower_s + mp_s + balance_s``, the passes on the transactional
 rewrite substrate), or the fusion pass ``fuse_s`` alone (the balance
 phase's Δ-maintained pair heap over the session's reachability index is
 the dominant pre-DSE win, and a regression there must not hide under the
-pre-DSE noise floor) — exceeds ``threshold ×`` the committed baseline
+pre-DSE noise floor), or the exit-verifier time ``verify_s`` (the
+plan-legality check of ``repro.core.verify`` runs on every ``optimize()``
+return and must stay in the low milliseconds) — exceeds ``threshold ×``
+the committed baseline
 (arms faster than ``--min-delta-s`` absolute growth are ignored — the
 PolyBench arms run in single-digit milliseconds and would otherwise gate
 on scheduler noise; the pre-DSE and fuse checks have their own
@@ -78,6 +81,9 @@ def _time_optimize(graph_builder, training: bool) -> dict:
         "mp_s": rep.mp_s,
         "balance_s": rep.balance_s,
         "pre_dse_s": rep.pre_dse_s,
+        # Exit plan-legality verification (repro.core.verify) — runs on
+        # every optimize() return, so it gates in --compare like fuse_s.
+        "verify_s": rep.verify_s,
         "nodes": len(sched.nodes),
         "evaluated": rep.parallelize.evaluated,
         "rejected_constraint": rep.parallelize.rejected_constraint,
@@ -128,6 +134,12 @@ PRE_DSE_MIN_DELTA_S = 0.05
 #: ~0.3 s O(n²·DFS) balance phase.
 FUSE_MIN_DELTA_S = 0.02
 
+#: absolute growth below this many seconds never gates the verify_s
+#: check.  The exit verifier runs in ~1–3 ms on every arm today; the
+#: guard keeps sub-millisecond jitter from gating while catching any
+#: future check family that makes verification a per-compile tax.
+VERIFY_MIN_DELTA_S = 0.02
+
 
 def compare(results: dict, baseline: dict, threshold: float,
             min_delta_s: float, qor_tolerance: float = 1e-3,
@@ -158,9 +170,14 @@ def compare(results: dict, baseline: dict, threshold: float,
             fuse = (f", fuse {old['fuse_s']*1e3:.2f}ms -> "
                     if "fuse_s" in old else ", fuse ") \
                    + f"{new['fuse_s']*1e3:.2f}ms"
+        ver = ""
+        if "verify_s" in new:
+            ver = (f", verify {old['verify_s']*1e3:.2f}ms -> "
+                   if "verify_s" in old else ", verify ") \
+                  + f"{new['verify_s']*1e3:.2f}ms"
         print(f"{arm}: wall {old['wall_s']:.3f}s -> {new['wall_s']:.3f}s "
               f"({ratio:.2f}x), qor {old['total_s']*1e3:.3f}ms -> "
-              f"{new['total_s']*1e3:.3f}ms{plan}{pre}{fuse}")
+              f"{new['total_s']*1e3:.3f}ms{plan}{pre}{fuse}{ver}")
         if (ratio > threshold
                 and new["wall_s"] - old["wall_s"] > min_delta_s):
             failures.append(
@@ -193,6 +210,19 @@ def compare(results: dict, baseline: dict, threshold: float,
                     f"{fuse_ratio:.2f}x the baseline "
                     f"{old['fuse_s']*1e3:.2f}ms (threshold {threshold:.2f}x)"
                     f" — reachability-index / pair-heap regression?")
+        # verify_s gates on its own: the exit legality check runs on
+        # every compile, so it must stay O(schedule), not O(search).
+        if "verify_s" in new and "verify_s" in old:
+            ver_ratio = (new["verify_s"] / old["verify_s"]
+                         if old["verify_s"] else float("inf"))
+            if (ver_ratio > threshold
+                    and new["verify_s"] - old["verify_s"]
+                    > VERIFY_MIN_DELTA_S):
+                failures.append(
+                    f"{arm}: exit-verify time {new['verify_s']*1e3:.2f}ms "
+                    f"is {ver_ratio:.2f}x the baseline "
+                    f"{old['verify_s']*1e3:.2f}ms (threshold "
+                    f"{threshold:.2f}x)")
         if new["total_s"] > old["total_s"] * (1 + qor_tolerance):
             failures.append(
                 f"{arm}: QoR regressed — estimated total_s "

@@ -4,17 +4,20 @@ from .balance import balance_paths
 from .construct import construct_functional
 from .estimator import (MULTI_POD, SINGLE_POD, MeshSpec, estimate,
                         roofline_terms)
+from .faults import (FaultInjector, InjectedFault, active_injector,
+                     fault_point, inject_faults)
 from .fusion import fuse_tasks
 from .graph import build_lm_graph
 from .incremental import IncrementalEstimator
 from .ir import (AccessMap, Buffer, Graph, GraphTopology, MemoryEffect, Node,
                  Op, Schedule, ScheduleTopology, Stream, TensorValue)
-from .lower import lower_to_structural
+from .lower import fallback_schedule, lower_to_structural
 from .multi_producer import eliminate_multi_producers
-from .optimize import OptimizeReport, optimize
-from .parallelize import parallelize
+from .optimize import Degradation, OptimizeReport, optimize
+from .parallelize import best_uniform, parallelize
 from .plan import ShardingPlan, build_plan, project_rules, replicated_plan
 from .rewrite import GraphRewriteSession, RewriteError, ScheduleRewriteSession
+from .verify import VerifyError, VerifyIssue, VerifyReport, verify
 
 __all__ = [
     "AccessMap", "Buffer", "Graph", "GraphTopology", "MemoryEffect", "Node",
@@ -23,8 +26,13 @@ __all__ = [
     "MULTI_POD", "estimate", "IncrementalEstimator", "roofline_terms",
     "construct_functional",
     "fuse_tasks", "lower_to_structural", "eliminate_multi_producers",
-    "balance_paths", "parallelize", "ShardingPlan", "build_plan",
+    "balance_paths", "parallelize", "best_uniform", "ShardingPlan",
+    "build_plan",
     "project_rules", "replicated_plan", "optimize", "OptimizeReport",
+    "Degradation", "fallback_schedule",
     "build_lm_graph",
     "GraphRewriteSession", "ScheduleRewriteSession", "RewriteError",
+    "verify", "VerifyReport", "VerifyIssue", "VerifyError",
+    "inject_faults", "fault_point", "active_injector", "FaultInjector",
+    "InjectedFault",
 ]

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from .faults import fault_point
 from .ir import Buffer, MemoryEffect, Node, Schedule, fresh_name
 from .rewrite import ScheduleRewriteSession, make_copy_op
 
@@ -64,6 +65,7 @@ def balance_paths(sched: Schedule, onchip_budget_bytes: int = 1 << 27,
             if skew <= 0:
                 continue
             stats.max_skew = max(stats.max_skew, skew)
+            fault_point("balance.edge")
             buf = sched.buffers[bname]
             dup_bytes = buf.bytes * skew
             if dup_bytes <= onchip_budget_bytes:

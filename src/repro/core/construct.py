@@ -16,6 +16,7 @@ parent map grows.
 """
 from __future__ import annotations
 
+from .faults import fault_point
 from .ir import Graph, Op
 from .rewrite import GraphRewriteSession
 
@@ -42,6 +43,7 @@ def _construct_region(rs: GraphRewriteSession, owner: Op | None,
         if o.has_region:
             _construct_region(rs, o, o.region)
     if is_dispatchable(ops):
+        fault_point("construct.wrap")
         rs.wrap_dispatch(owner)
 
 

@@ -34,6 +34,7 @@ import itertools
 from collections import deque
 from dataclasses import dataclass, field
 
+from .faults import fault_point
 from .ir import Graph, Op, make_task
 from .rewrite import GraphRewriteSession
 
@@ -134,6 +135,7 @@ def _pattern_phase(d: Op, patterns: list[FusionPattern],
             p, c = rs.order(d, t, u)
             pm, cm = rs.leaf_meta(p), rs.leaf_meta(c)
             if any(pat.matches_meta(pm, cm) for pat in patterns):
+                fault_point("fusion.pattern")
                 merged = rs.fuse(d, p, c)
                 stats.pattern_fusions += 1
                 stats.log.append(f"pattern: {p.name}+{c.name}->{merged.name}")
@@ -222,6 +224,7 @@ def _balance_phase(d: Op, stats: FusionStats, rs: GraphRewriteSession,
         # Paper line 9: stop when fusing would create a new critical task.
         if s > crit and not forced:
             break
+        fault_point("fusion.balance")
         merged = rs.fuse(d, a, b)
         crit = max(crit, rs.intensity(merged))
         if rs.region_epoch(d) != epoch:

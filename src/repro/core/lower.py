@@ -23,6 +23,7 @@ paying the first full index build.
 """
 from __future__ import annotations
 
+from .faults import fault_point
 from .ir import Buffer, Graph, MemoryEffect, Node, Op, Schedule
 from .rewrite import ScheduleRewriteSession
 
@@ -57,6 +58,37 @@ def _leaf_body(task: Op) -> list[Op]:
     return [o for o in task.walk() if not o.has_region]
 
 
+def fallback_schedule(graph: Graph, name: str | None = None) -> Schedule:
+    """Bottom rung of the degradation ladder for lowering failures: the
+    whole graph as ONE Structural node (every leaf op in one body, every
+    graph input/output/weight as an external buffer).
+
+    Always legal — no internal edges, so acyclicity, stage order and
+    multi-producer invariants hold trivially — and the DSE can still
+    shard the single node, so a broken lowering degrades to a fused
+    whole-model computation instead of a failed compile.  Deliberately
+    assembled *without* a rewrite session: this path must stay
+    serviceable when the transactional machinery (or a fault injected
+    into it) is what took the primary lowering down."""
+    leaves = [o for top in graph.ops for o in top.walk()
+              if not o.has_region]
+    effects = _node_effects(Op(name="__fallback__", kind="task",
+                               region=leaves))
+    graph_io = set(graph.inputs) | set(graph.outputs)
+    crossing = {v: e for v, e in effects.items()
+                if v in graph_io or graph.values[v].is_weight}
+    sched = Schedule(name=name or f"{graph.name}_sched_fallback")
+    sched.nodes.append(Node(name=f"{graph.name}_all", args=dict(crossing),
+                            body=leaves))
+    for v in crossing:
+        sched.buffers[v] = Buffer.from_tensor(graph.values[v],
+                                              placement="hbm")
+        sched.args.append(v)
+    sched.outputs = [v for v in graph.outputs if v in sched.buffers]
+    sched.value_bytes = {v: t.bytes for v, t in graph.values.items()}
+    return sched
+
+
 def lower_to_structural(graph: Graph, name: str | None = None,
                         selfcheck: bool = False) -> Schedule:
     """Lower the (fused) Functional dataflow to a Structural schedule.
@@ -74,6 +106,7 @@ def lower_to_structural(graph: Graph, name: str | None = None,
     sched = Schedule(name=name or f"{graph.name}_sched")
     with ScheduleRewriteSession(sched, selfcheck=selfcheck) as rs:
         for t in tasks:
+            fault_point("lower.node")
             effects = _node_effects(t)
             sub = None
             inner_dispatches = [c for c in t.region if c.kind == "dispatch"]
@@ -104,6 +137,7 @@ def lower_to_structural(graph: Graph, name: str | None = None,
                     if vname in n.args:
                         rs.drop_arg(n, vname)
                 continue
+            fault_point("lower.buffer")
             t = graph.values[vname]
             external = vname in graph_io or t.is_weight
             rs.add_buffer(Buffer.from_tensor(t, placement="hbm"),

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from .faults import fault_point
 from .ir import Buffer, MemoryEffect, Node, Schedule, fresh_name
 from .rewrite import ScheduleRewriteSession, make_copy_op
 
@@ -66,6 +67,7 @@ def _eliminate(sched: Schedule, rs: ScheduleRewriteSession,
             continue
         cur = bname
         for p in producers[1:]:
+            fault_point("mp.duplicate")
             base = sched.buffers[bname]
             dup_name = fresh_name(f"{bname}_dup")
             rs.add_buffer(Buffer(
@@ -90,6 +92,7 @@ def _eliminate(sched: Schedule, rs: ScheduleRewriteSession,
         producers = sorted(rs.producers(bname), key=rs.position)
         if len(producers) <= 1:
             continue
+        fault_point("mp.merge")
         # Body concatenation and effect merging are pass policy; the
         # session owns the structural swap (retire olds + insert merged).
         merged = Node(name=fresh_name("merged_node"))

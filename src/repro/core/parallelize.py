@@ -87,13 +87,15 @@ from __future__ import annotations
 
 import itertools
 import math
+import time
 import warnings
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from fractions import Fraction
 from typing import Optional
 
-from .estimator import MeshSpec, ScheduleCost
+from .estimator import MeshSpec, ScheduleCost, estimate
+from .faults import corrupt_value, fault_point
 from .incremental import IncrementalEstimator, Snapshot
 from .ir import Node, Schedule
 
@@ -281,6 +283,83 @@ def _apply(node: Node, proposal: dict[str, tuple[str, ...]],
         for d, axes in proposal.items()}
 
 
+# --------------------------------------------------------------------------
+# Uniform-assignment family (beam seeds + degradation-ladder bottom rung)
+# --------------------------------------------------------------------------
+
+def _uniform_proposal(node: Node, assign: dict[str, tuple[str, ...]],
+                      pf_cap: int, mesh: MeshSpec
+                      ) -> dict[str, tuple[str, ...]]:
+    """Quantize one uniform axis→dim layout onto ``node``: keep only the
+    dims the node can shard, drop non-divisible factors, and respect the
+    node's IA parallel-factor budget (batch-like dims are budget-free,
+    matching ``_proposals``)."""
+    dims = _shardable_dims(node)
+    prop: dict[str, tuple[str, ...]] = {}
+    total = 1
+    for d, axes in assign.items():
+        if d not in dims:
+            continue
+        f = math.prod(mesh.size(a) for a in axes)
+        if dims[d] % f:
+            continue
+        if not (d == "batch" or d.startswith("batch_")):
+            if total * f > pf_cap:
+                continue
+            total *= f
+        prop[d] = axes
+    return prop
+
+
+def _uniform_assignments(sched: Schedule) -> list[dict[str, tuple[str, ...]]]:
+    """The uniform-assignment family: every (data-axis dim, model-axis
+    dim) pairing over the schedule's shardable dims — one coordinated
+    layout applied to every node at once."""
+    all_dims = sorted({d for n in sched.nodes
+                       for d in _shardable_dims(n)})
+    cands = []
+    for d1 in all_dims + [None]:
+        for d2 in all_dims + [None]:
+            a: dict[str, tuple[str, ...]] = {}
+            if d1 and "data" in axis_pref(d1):
+                a[d1] = ("data",)
+            if d2 and "model" in axis_pref(d2):
+                a[d2] = (a.get(d2, ()) + ("model",))
+            if a:
+                cands.append(a)
+    return cands
+
+
+def best_uniform(sched: Schedule, mesh: MeshSpec, *,
+                 max_parallel_factor: int | None = None,
+                 ia: bool = True, training: bool = True
+                 ) -> tuple[dict[str, tuple[str, ...]], ScheduleCost]:
+    """Apply the best member of the uniform-assignment family (including
+    the all-replicated empty assignment) to ``sched`` in place and return
+    ``(assignment, cost)``.
+
+    This is the degradation ladder's bottom DSE rung and the QoR floor
+    reference: it deliberately bypasses the incremental engine and every
+    fault-injection site — plain proposal application plus the batch
+    :func:`~repro.core.estimator.estimate` — so it stays serviceable when
+    the machinery above it is the thing that failed."""
+    max_pf = max_parallel_factor or mesh.chips
+    pf = parallel_factors(sched, max_pf, ia)
+    best: tuple[ScheduleCost, dict, dict] | None = None
+    for assign in [{}] + _uniform_assignments(sched):
+        for n in sched.nodes:
+            _apply(n, _uniform_proposal(n, assign, pf[n.name], mesh), mesh)
+        cost = estimate(sched, mesh, training=training)
+        if best is None or cost.total_s < best[0].total_s:
+            best = (cost, assign,
+                    {n.name: (dict(n.axis_map), dict(n.unroll))
+                     for n in sched.nodes})
+    cost, assign, state = best
+    for n in sched.nodes:
+        n.axis_map, n.unroll = state[n.name]
+    return assign, cost
+
+
 @dataclass
 class ParallelizeResult:
     order: list[str] = field(default_factory=list)
@@ -301,6 +380,13 @@ class ParallelizeResult:
     beam_states: int = 0
     #: joint (origin + neighbourhood re-DSE) moves expanded.
     joint_moves: int = 0
+    #: degradations taken inside the DSE (e.g. a beam-phase failure that
+    #: fell back to the converged greedy snapshot); surfaced into
+    #: ``OptimizeReport.degradations`` by ``optimize()``.
+    degraded: list[str] = field(default_factory=list)
+    #: True when the wall-clock ``deadline`` expired and the search
+    #: returned its best-so-far snapshot instead of running to fixpoint.
+    budget_expired: bool = False
 
 
 def parallelize(sched: Schedule, mesh: MeshSpec, *,
@@ -312,7 +398,8 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
                 beam_rounds: int = 3,
                 sweep_workers: int | None = None,
                 colored_sweeps: bool = True,
-                seed_uniform: bool | None = None) -> ParallelizeResult:
+                seed_uniform: bool | None = None,
+                deadline: float | None = None) -> ParallelizeResult:
     """Paper Section 6.5 steps 1-4 over a Structural schedule (in place).
 
     Steps 1-3 follow the paper; step 4 runs the paper's greedy
@@ -357,6 +444,13 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
             the uniform-assignment family subsumes it (kept so existing
             call sites don't break; pass ``beam_width=0`` *and*
             ``seed_uniform=True`` to run the legacy escape hatch).
+        deadline: absolute ``time.perf_counter()`` instant after which
+            the search becomes *anytime*: convergence sweeps and beam
+            rounds stop at the next boundary and the best-so-far
+            snapshot is restored (O(1) via the incremental engine).
+            The initial greedy pass always completes — a full assignment
+            must exist before "best so far" means anything.  ``None``
+            (the default) never interrupts.
     """
     if seed_uniform is not None:
         warnings.warn(
@@ -466,11 +560,13 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
                 neigh_penalty = sum(
                     1 for d, axes in neighbor_axes.items()
                     if proposal.get(d, ()) != axes)
-                key = (s.total_s, s.hbm_bytes, neigh_penalty, pref_penalty)
+                key = (corrupt_value("dse.score", s.total_s),
+                       s.hbm_bytes, neigh_penalty, pref_penalty)
             else:
                 # CA off: ignore the coupling cost, exactly the failure
                 # mode Fig. 11 demonstrates.
-                key = (s.node_compute_s, -s.node_parallel_factor)
+                key = (corrupt_value("dse.score", s.node_compute_s),
+                       -s.node_parallel_factor)
             scored.append((key, proposal, unroll))
         # Stable sort: among equal keys the earliest-enumerated proposal
         # wins, matching the strict `<` selection of a linear scan.
@@ -480,6 +576,7 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
     def dse_node(node: Node, done: set[str]) -> bool:
         """One constrained DSE for ``node`` (Alg. 4).  Returns True when
         the assignment changed."""
+        fault_point("dse.node")
         top, evaluated, rejected = rank_node(node, done, 1)
         res.evaluated += evaluated
         res.rejected_constraint += rejected
@@ -542,8 +639,14 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
     def converge(dirty: set[str], max_sweeps: int, tag: str) -> None:
         """Full-order coordinate descent to a fixpoint: every sweep covers
         the *whole* current frontier (no first-change short-circuit) and
-        re-dirties the affected sets of whatever changed."""
+        re-dirties the affected sets of whatever changed.  Under a
+        ``deadline`` each sweep boundary is an interruption point —
+        committed state is always a complete, consistent assignment."""
         for s in range(max_sweeps):
+            if deadline is not None and time.perf_counter() >= deadline:
+                res.budget_expired = True
+                res.log.append(f"{tag} sweep{s + 1}: budget expired")
+                break
             frontier = [n for n in ordered if n.name in dirty]
             if not frontier:
                 break
@@ -578,36 +681,11 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
             every node at once (routed through the incremental engine, so each
             candidate costs O(edges), not a batch re-estimate)."""
             for n in sched.nodes:
-                dims = _shardable_dims(n)
-                prop: dict[str, tuple[str, ...]] = {}
-                total = 1
-                for d, axes in assign.items():
-                    if d not in dims:
-                        continue
-                    f = math.prod(mesh.size(a) for a in axes)
-                    if dims[d] % f:
-                        continue
-                    if not (d == "batch" or d.startswith("batch_")):
-                        if total * f > res.pf[n.name]:
-                            continue
-                        total *= f
-                    prop[d] = axes
-                est.apply(n.name, prop)
+                est.apply(n.name, _uniform_proposal(
+                    n, assign, res.pf[n.name], mesh))
 
         def uniform_candidates() -> list[dict[str, tuple[str, ...]]]:
-            all_dims = sorted({d for n in sched.nodes
-                               for d in _shardable_dims(n)})
-            cands = []
-            for d1 in all_dims + [None]:
-                for d2 in all_dims + [None]:
-                    a: dict[str, tuple[str, ...]] = {}
-                    if d1 and "data" in axis_pref(d1):
-                        a[d1] = ("data",)
-                    if d2 and "model" in axis_pref(d2):
-                        a[d2] = (a.get(d2, ()) + ("model",))
-                    if a:
-                        cands.append(a)
-            return cands
+            return _uniform_assignments(sched)
 
         def neighborhood(origin: str, radius: int) -> list[str]:
             """Nodes within ``radius`` hops of ``origin`` in the affected-set
@@ -620,86 +698,124 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
             seen.discard(origin)
             return [n.name for n in ordered if n.name in seen]
 
-        # ---- beam phase: joint multi-node proposals.
+        # ---- beam phase: joint multi-node proposals.  The whole phase —
+        # seeding, rounds, refinement — runs inside one error boundary:
+        # the beam is an *optimization* over the converged greedy state,
+        # never a correctness dependency, so any failure inside it
+        # restores the best fully-committed snapshot seen so far (at
+        # worst the greedy one) and the compile proceeds.
         if ca and beam_width > 1:
-            def sig(snap: Snapshot):
-                return tuple(sorted(
-                    (nm, tuple(sorted((d, axes) for d, axes in am.items())))
-                    for nm, (am, _ur) in snap.items()))
+            safe_key, safe_snap = greedy_key, greedy_snap
 
-            states: dict[tuple, tuple[tuple, Snapshot]] = {}
+            def expired() -> bool:
+                if deadline is not None and time.perf_counter() >= deadline:
+                    res.budget_expired = True
+                    return True
+                return False
 
-            def add_state(snap: Snapshot, key: tuple) -> None:
-                s = sig(snap)
-                if s not in states or key < states[s][0]:
-                    states[s] = (key, snap)
+            try:
+                def sig(snap: Snapshot):
+                    return tuple(sorted(
+                        (nm, tuple(sorted((d, axes)
+                                          for d, axes in am.items())))
+                        for nm, (am, _ur) in snap.items()))
 
-            add_state(greedy_snap, greedy_key)
-            for a in uniform_candidates():
-                apply_uniform(a)
-                key = (est.total_s, est.hbm_bytes_per_device)
-                add_state(est.snapshot(), key)
-            beam = sorted(states.values(), key=lambda t: t[0])[:beam_width]
-            best_key = beam[0][0]
-            res.log.append(
-                f"beam init: {len(states)} states, best {best_key[0]*1e3:.3f}ms"
-                f" (greedy {greedy_key[0]*1e3:.3f}ms)")
+                states: dict[tuple, tuple[tuple, Snapshot]] = {}
 
-            expand_states = max(1, beam_width // 2)
-            max_origins = 4
-            joint_runners = 2
-            for rnd in range(beam_rounds):
-                successors: dict[tuple, tuple[tuple, Snapshot]] = {
-                    sig(snap): (key, snap) for key, snap in beam}
-                for key, snap in beam[:expand_states]:
-                    est.restore(snap)
-                    mm = est.mismatched_nodes()
-                    origins = sorted(
-                        (n for n in ordered if proposals_for(n)),
-                        key=lambda n: (n.name not in mm,
-                                       -est.node_latency_s(n.name)))
-                    for node in origins[:max_origins]:
-                        ranked, evaluated, rejected = rank_node(
-                            node, all_names, joint_runners + 1)
-                        res.evaluated += evaluated
-                        res.rejected_constraint += rejected
-                        tried = 0
-                        for _pkey, prop, unroll in ranked:
-                            if prop == node.axis_map:
-                                continue
-                            if tried >= joint_runners:
-                                break
-                            tried += 1
-                            res.joint_moves += 1
-                            est.apply(node.name, prop, unroll)
-                            for m in neighborhood(node.name, joint_radius):
-                                dse_node(sched.node(m), all_names)
-                            skey = (est.total_s, est.hbm_bytes_per_device)
-                            succ = est.snapshot()
-                            s = sig(succ)
-                            if s not in successors or skey < successors[s][0]:
-                                successors[s] = (skey, succ)
-                            est.restore(snap)
-                beam = sorted(successors.values(), key=lambda t: t[0])[:beam_width]
-                res.log.append(
-                    f"beam round {rnd + 1}: {len(successors)} states, best "
-                    f"{beam[0][0][0]*1e3:.3f}ms")
-                if not beam[0][0] < best_key:
-                    break
+                def add_state(snap: Snapshot, key: tuple) -> None:
+                    s = sig(snap)
+                    if s not in states or key < states[s][0]:
+                        states[s] = (key, snap)
+
+                add_state(greedy_snap, greedy_key)
+                for a in uniform_candidates():
+                    apply_uniform(a)
+                    key = (est.total_s, est.hbm_bytes_per_device)
+                    add_state(est.snapshot(), key)
+                beam = sorted(states.values(),
+                              key=lambda t: t[0])[:beam_width]
                 best_key = beam[0][0]
-            res.beam_states = len(states) + res.joint_moves
+                if best_key < safe_key:
+                    safe_key, safe_snap = beam[0]
+                res.log.append(
+                    f"beam init: {len(states)} states, best "
+                    f"{best_key[0]*1e3:.3f}ms"
+                    f" (greedy {greedy_key[0]*1e3:.3f}ms)")
 
-            # Refine the winner with full sweeps; keep whichever of
-            # {refined, pre-refinement best, greedy} scores best — beam QoR
-            # can therefore never fall below greedy QoR.
-            est.restore(beam[0][1])
-            converge(set(all_names), max_sweeps=4, tag="beam-refine")
-            final_key = (est.total_s, est.hbm_bytes_per_device)
-            if beam[0][0] < final_key:
+                expand_states = max(1, beam_width // 2)
+                max_origins = 4
+                joint_runners = 2
+                for rnd in range(beam_rounds):
+                    if expired():
+                        res.log.append(
+                            f"beam round {rnd + 1}: budget expired")
+                        break
+                    successors: dict[tuple, tuple[tuple, Snapshot]] = {
+                        sig(snap): (key, snap) for key, snap in beam}
+                    for key, snap in beam[:expand_states]:
+                        if expired():
+                            break
+                        est.restore(snap)
+                        mm = est.mismatched_nodes()
+                        origins = sorted(
+                            (n for n in ordered if proposals_for(n)),
+                            key=lambda n: (n.name not in mm,
+                                           -est.node_latency_s(n.name)))
+                        for node in origins[:max_origins]:
+                            ranked, evaluated, rejected = rank_node(
+                                node, all_names, joint_runners + 1)
+                            res.evaluated += evaluated
+                            res.rejected_constraint += rejected
+                            tried = 0
+                            for _pkey, prop, unroll in ranked:
+                                if prop == node.axis_map:
+                                    continue
+                                if tried >= joint_runners:
+                                    break
+                                fault_point("dse.joint")
+                                tried += 1
+                                res.joint_moves += 1
+                                est.apply(node.name, prop, unroll)
+                                for m in neighborhood(node.name,
+                                                      joint_radius):
+                                    dse_node(sched.node(m), all_names)
+                                skey = (est.total_s,
+                                        est.hbm_bytes_per_device)
+                                succ = est.snapshot()
+                                s = sig(succ)
+                                if s not in successors \
+                                        or skey < successors[s][0]:
+                                    successors[s] = (skey, succ)
+                                est.restore(snap)
+                    beam = sorted(successors.values(),
+                                  key=lambda t: t[0])[:beam_width]
+                    res.log.append(
+                        f"beam round {rnd + 1}: {len(successors)} states, "
+                        f"best {beam[0][0][0]*1e3:.3f}ms")
+                    if beam[0][0] < safe_key:
+                        safe_key, safe_snap = beam[0]
+                    if not beam[0][0] < best_key:
+                        break
+                    best_key = beam[0][0]
+                res.beam_states = len(states) + res.joint_moves
+
+                # Refine the winner with full sweeps; keep whichever of
+                # {refined, pre-refinement best, greedy} scores best — beam
+                # QoR can therefore never fall below greedy QoR.
                 est.restore(beam[0][1])
-                final_key = beam[0][0]
-            if greedy_key < final_key:
-                est.restore(greedy_snap)
+                converge(set(all_names), max_sweeps=4, tag="beam-refine")
+                final_key = (est.total_s, est.hbm_bytes_per_device)
+                if beam[0][0] < final_key:
+                    est.restore(beam[0][1])
+                    final_key = beam[0][0]
+                if greedy_key < final_key:
+                    est.restore(greedy_snap)
+            except Exception as e:
+                res.degraded.append(
+                    f"beam phase failed ({type(e).__name__}: {e}); "
+                    "restored best pre-failure snapshot")
+                res.log.append(res.degraded[-1])
+                est.restore(safe_snap)
         elif seed_uniform:
             # Legacy pre-beam escape hatch (deprecated): best uniform
             # assignment, then two refinement sweeps over the full node order

@@ -29,6 +29,7 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .estimator import MeshSpec
+from .faults import fault_point
 from .ir import Schedule, ScheduleTopology
 
 logger = logging.getLogger(__name__)
@@ -189,6 +190,7 @@ class ShardingPlan:
         ``coherent=True`` and mutated only through this method); then the
         result is bit-identical to a full :func:`project_rules` rebuild
         under the new rules.  Returns the re-projected site names."""
+        fault_point("plan.delta")
         if axes:
             self.rules[dim] = tuple(axes)
         else:
@@ -279,6 +281,7 @@ def build_plan(sched: Schedule, mesh_spec: MeshSpec,
             schedule's cached one (the same structure the incremental
             estimator's DSE ran on).
     """
+    fault_point("plan.build")
     plan = ShardingPlan(mesh_spec=mesh_spec, fsdp=fsdp, meta=meta or {})
     topo = topology or sched.topology()
 
@@ -327,6 +330,7 @@ def project_rules(plan: ShardingPlan, sched: Schedule,
     a single-rule update.  Both run the same projection
     (:func:`_projected_spec`) over the same cached per-axis dims, so a
     delta-maintained plan and a from-scratch rebuild are bit-identical."""
+    fault_point("plan.project")
     topo = topology or sched.topology()
     for bname, buf in sched.buffers.items():
         if bname not in plan.buffer_specs:

@@ -54,6 +54,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Iterable, Optional, Sequence
 
+from .faults import fault_point
 from .ir import (AccessMap, Buffer, Graph, GraphTopology, MemoryEffect, Node,
                  Op, Schedule, ScheduleTopology, TokenEdge, depth_map_over,
                  fresh_name, make_dispatch, make_task, topo_order_over)
@@ -317,7 +318,14 @@ class GraphRewriteSession:
         if not self._open:
             return
         if exc_type is None:
-            self.commit()
+            try:
+                self.commit()
+            except BaseException:
+                # A commit-time failure must not leave a half-mutated
+                # graph behind: the undo log is still intact, replay it.
+                if self._open:
+                    self.rollback()
+                raise
         else:
             self.rollback()
 
@@ -331,6 +339,7 @@ class GraphRewriteSession:
         restructured wholesale, so the cache is invalidated instead (the
         next ``graph.topology()`` rebuilds lazily)."""
         self._check_open()
+        fault_point("rewrite.commit")
         self._open = False
         g = self.graph
         if self._canonicalized:
@@ -854,7 +863,14 @@ class ScheduleRewriteSession:
         if not self._open:
             return
         if exc_type is None:
-            self.commit()
+            try:
+                self.commit()
+            except BaseException:
+                # A commit-time failure must not leave a half-mutated
+                # schedule behind: the undo log is still intact, replay it.
+                if self._open:
+                    self.rollback()
+                raise
         else:
             self.rollback()
 
@@ -866,6 +882,7 @@ class ScheduleRewriteSession:
         """Assemble the maintained topology, install it as the
         schedule's cache, and close the session."""
         self._check_open()
+        fault_point("rewrite.commit")
         topo = self._assemble()
         self._open = False
         self.sched._topology = topo

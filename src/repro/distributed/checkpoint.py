@@ -12,7 +12,16 @@ Writes go to ``step_XXXX.tmp`` and are renamed only after every shard +
 manifest lands, so a preemption mid-write can never corrupt the latest
 checkpoint; ``latest_step`` ignores uncommitted directories.  Saving is
 asynchronous (background thread) — the train loop donates nothing and
-keeps stepping while the previous state is serialised.
+keeps stepping while the previous state is serialised.  A failure inside
+the background write is captured and re-raised on the next ``wait()`` /
+``save()`` instead of dying silently on a daemon thread.
+
+Commit markers guard against *partial* writes; silent bit-rot after
+commit (a bad disk, a truncated object-store download) is caught by a
+per-shard CRC32 recorded in the manifest and verified on ``restore``.
+``restore_latest`` walks back to the newest step that verifies, so one
+corrupt checkpoint costs re-training from the previous one — not the
+job.
 
 Elastic restore: arrays are stored logically-whole per host shard with
 their global offsets; ``repro.distributed.elastic`` re-stitches them for
@@ -21,16 +30,24 @@ a different mesh/host count.
 from __future__ import annotations
 
 import json
+import logging
 import os
 import shutil
 import threading
 import time
+import zlib
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+logger = logging.getLogger(__name__)
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A committed checkpoint failed CRC verification on restore."""
 
 
 def _flatten(tree: Any) -> tuple[list[tuple[str, Any]], Any]:
@@ -51,6 +68,7 @@ class CheckpointManager:
     n_hosts: int = 1
     keep: int = 3
     _thread: Optional[threading.Thread] = field(default=None, repr=False)
+    _error: Optional[BaseException] = field(default=None, repr=False)
 
     def __post_init__(self):
         self.directory = Path(self.directory)
@@ -76,8 +94,14 @@ class CheckpointManager:
             tmp = self.directory / f"step_{step:06d}.tmp"
             final = self.directory / f"step_{step:06d}"
             tmp.mkdir(parents=True, exist_ok=True)
-            np.savez(tmp / f"shard_h{self.host_id:03d}.npz",
-                     **dict(host_named))
+            shard_name = f"shard_h{self.host_id:03d}.npz"
+            np.savez(tmp / shard_name, **dict(host_named))
+            crc32 = {shard_name: zlib.crc32((tmp / shard_name).read_bytes())}
+            if (final / "manifest.json").exists():
+                # Another host committed this step first: carry its shard
+                # CRCs forward so ours don't clobber them.
+                prev = json.loads((final / "manifest.json").read_text())
+                crc32 = {**prev.get("crc32", {}), **crc32}
             manifest = {
                 "step": step,
                 "n_hosts": self.n_hosts,
@@ -85,6 +109,7 @@ class CheckpointManager:
                 "shapes": {k: list(v.shape) for k, v in host_named},
                 "dtypes": {k: str(v.dtype) for k, v in host_named},
                 "bf16_keys": bf16_keys,
+                "crc32": crc32,
                 "time": time.time(),
             }
             (tmp / "manifest.json").write_text(json.dumps(manifest))
@@ -99,16 +124,29 @@ class CheckpointManager:
                 os.replace(tmp, final)
             self._gc()
 
+        def guarded_write():
+            try:
+                write()
+            except BaseException as e:   # surfaced on wait()/next save()
+                self._error = e
+
         if blocking:
             write()
         else:
-            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread = threading.Thread(target=guarded_write,
+                                            daemon=True)
             self._thread.start()
 
     def wait(self) -> None:
+        """Join the in-flight background save.  A failure captured on the
+        writer thread is re-raised *here* (and from the next ``save()``,
+        which waits first) — an async save error must not be silent."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def _gc(self) -> None:
         steps = self.steps()
@@ -130,12 +168,25 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     def restore(self, step: int, like: Any) -> Any:
-        """Restore into the structure of ``like`` (shapes must match)."""
+        """Restore into the structure of ``like`` (shapes must match).
+
+        The host shard's CRC32 is verified against the manifest before
+        deserialising; a mismatch raises
+        :class:`CheckpointCorruptionError` (post-commit bit-rot — the
+        atomic-commit marker cannot catch it)."""
         import ml_dtypes
         d = self.directory / f"step_{step:06d}"
         manifest = json.loads((d / "manifest.json").read_text())
         bf16 = set(manifest.get("bf16_keys", ()))
-        data = np.load(d / f"shard_h{self.host_id:03d}.npz")
+        shard_name = f"shard_h{self.host_id:03d}.npz"
+        expect = manifest.get("crc32", {}).get(shard_name)
+        if expect is not None:
+            got = zlib.crc32((d / shard_name).read_bytes())
+            if got != expect:
+                raise CheckpointCorruptionError(
+                    f"step {step}: {shard_name} crc32 {got:#010x} != "
+                    f"manifest {expect:#010x} (corrupt shard)")
+        data = np.load(d / shard_name)
         named, treedef = _flatten(like)
         leaves = []
         for key, ref in named:
@@ -151,7 +202,24 @@ class CheckpointManager:
         return jax.tree.unflatten(treedef, leaves)
 
     def restore_latest(self, like: Any) -> tuple[Optional[int], Any]:
-        step = self.latest_step()
-        if step is None:
+        """Restore the newest committed step that *verifies*.  A step
+        failing CRC (or deserialisation) is skipped with a warning and
+        the previous committed step is tried — one corrupt checkpoint
+        costs re-training from the prior one, not the job.  Raises only
+        when every committed step fails."""
+        steps = self.steps()
+        if not steps:
             return None, like
-        return step, self.restore(step, like)
+        last_err: Optional[BaseException] = None
+        for step in reversed(steps):
+            try:
+                return step, self.restore(step, like)
+            except (CheckpointCorruptionError, OSError,
+                    ValueError, KeyError) as e:
+                logger.warning(
+                    "checkpoint step %d failed to restore (%s); falling "
+                    "back to previous committed step", step, e)
+                last_err = e
+        raise CheckpointCorruptionError(
+            f"no committed step in {self.directory} restored cleanly "
+            f"(tried {steps[::-1]})") from last_err

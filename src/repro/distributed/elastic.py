@@ -24,13 +24,31 @@ from .checkpoint import CheckpointManager, _flatten
 def gather_full_tree(directory: str | Path, step: int, like: Any) -> Any:
     """Load + concatenate every host shard of a checkpoint along the
     leading (data-sharded) axis when host shards differ, or verify
-    replicas agree."""
+    replicas agree.
+
+    Validates the step before stitching: the directory must carry the
+    ``COMMITTED`` marker, and every host shard the manifest promises
+    (``n_hosts``) must be present — a silently-missing shard would
+    otherwise stitch a smaller, wrong tree."""
     import ml_dtypes
     directory = Path(directory)
     d = directory / f"step_{step:06d}"
+    if not (d / "COMMITTED").exists():
+        raise ValueError(
+            f"checkpoint step {step} at {d} is not committed "
+            "(missing COMMITTED marker); refusing to stitch a "
+            "partial write")
     manifest = json.loads((d / "manifest.json").read_text())
     bf16 = set(manifest.get("bf16_keys", ()))
     shards = sorted(d.glob("shard_h*.npz"))
+    n_hosts = int(manifest.get("n_hosts", len(shards)))
+    have = {int(s.name[len("shard_h"):-len(".npz")]) for s in shards}
+    missing = sorted(set(range(n_hosts)) - have)
+    if missing:
+        raise ValueError(
+            f"checkpoint step {step} at {d}: manifest promises "
+            f"{n_hosts} host shards but hosts {missing} are missing "
+            f"(found {sorted(have)})")
     datas = [np.load(s) for s in shards]
     named, treedef = _flatten(like)
     leaves = []

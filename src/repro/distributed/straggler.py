@@ -66,9 +66,17 @@ class StragglerMonitor:
         return actions
 
     def shard_weights(self) -> dict[int, float]:
-        """Relative loader share per host ∝ 1/EMA (slow hosts get less)."""
+        """Relative loader share per host ∝ 1/EMA (slow hosts get less).
+
+        Hosts with no timing sample yet are assumed fleet-median speed
+        (not dropped — every host in ``range(n_hosts)`` gets a share),
+        and EMAs are clamped away from zero so a degenerate 0-second
+        sample cannot divide out the whole distribution."""
         if not self._ema_s:
             return {h: 1.0 / self.n_hosts for h in range(self.n_hosts)}
-        inv = {h: 1.0 / t for h, t in self._ema_s.items()}
+        eps = 1e-9
+        med = max(statistics.median(self._ema_s.values()), eps)
+        hosts = set(range(self.n_hosts)) | set(self._ema_s)
+        inv = {h: 1.0 / max(self._ema_s.get(h, med), eps) for h in hosts}
         z = sum(inv.values())
         return {h: v / z for h, v in inv.items()}
