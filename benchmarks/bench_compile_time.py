@@ -40,7 +40,14 @@ on scheduler noise; the pre-DSE and fuse checks have their own
 ``PRE_DSE_MIN_DELTA_S`` / ``FUSE_MIN_DELTA_S`` guards).  QoR
 (``total_s``) drift is reported alongside and fails the
 gate when the estimated schedule got *worse* — compile-time wins must
-not be bought with QoR.  In compare mode the fresh results go to a
+not be bought with QoR.  Because the default DSE is the hierarchical
+two-level search while older baselines were recorded with the flat
+whole-schedule beam, these two checks together are the hierarchical
+acceptance gate: the hierarchical wall must stay within threshold of
+the flat baseline and the hierarchical QoR must never regress past it.
+Each arm also reports the per-level split — ``inner_dse_s`` (per-region
+inner searches), ``outer_dse_s`` (inter-region composition) and
+``regions`` — so a DSE-time regression can be attributed to a level.  In compare mode the fresh results go to a
 scratch dir (unless ``REPRO_BENCH_OUT_DIR`` is set) so a failing run
 cannot overwrite the committed baseline it is being judged against.
 """
@@ -87,6 +94,12 @@ def _time_optimize(graph_builder, training: bool) -> dict:
         "nodes": len(sched.nodes),
         "evaluated": rep.parallelize.evaluated,
         "rejected_constraint": rep.parallelize.rejected_constraint,
+        # Two-level DSE split (repro.core.parallelize): wall time of the
+        # per-region inner searches vs. the inter-region composition, and
+        # how many regions the partitioner produced (1 = flat path).
+        "inner_dse_s": rep.inner_dse_s,
+        "outer_dse_s": rep.outer_dse_s,
+        "regions": rep.regions,
         "total_s": rep.cost.total_s,
     }
 
@@ -104,14 +117,20 @@ def run(report, archs=None, fast: bool = False) -> dict:
         report.add(f"compile_time/{arch}", us_per_call=r["wall_s"] * 1e6,
                    derived=f"nodes={r['nodes']}|evaluated={r['evaluated']}"
                            f"|plan_ms={r['plan_s'] * 1e3:.3f}"
-                           f"|pre_dse_ms={r['pre_dse_s'] * 1e3:.3f}")
+                           f"|pre_dse_ms={r['pre_dse_s'] * 1e3:.3f}"
+                           f"|regions={r['regions']}"
+                           f"|inner_ms={r['inner_dse_s'] * 1e3:.3f}"
+                           f"|outer_ms={r['outer_dse_s'] * 1e3:.3f}")
     for name in (PB_ARMS[:2] if fast else PB_ARMS):
         r = _time_optimize(POLYBENCH[name], training=False)
         results[f"polybench/{name}"] = r
         report.add(f"compile_time/pb_{name}", us_per_call=r["wall_s"] * 1e6,
                    derived=f"nodes={r['nodes']}|evaluated={r['evaluated']}"
                            f"|plan_ms={r['plan_s'] * 1e3:.3f}"
-                           f"|pre_dse_ms={r['pre_dse_s'] * 1e3:.3f}")
+                           f"|pre_dse_ms={r['pre_dse_s'] * 1e3:.3f}"
+                           f"|regions={r['regions']}"
+                           f"|inner_ms={r['inner_dse_s'] * 1e3:.3f}"
+                           f"|outer_ms={r['outer_dse_s'] * 1e3:.3f}")
 
     out_dir = Path(os.environ.get("REPRO_BENCH_OUT_DIR", "."))
     out = out_dir / "BENCH_compile_time.json"
@@ -175,9 +194,14 @@ def compare(results: dict, baseline: dict, threshold: float,
             ver = (f", verify {old['verify_s']*1e3:.2f}ms -> "
                    if "verify_s" in old else ", verify ") \
                   + f"{new['verify_s']*1e3:.2f}ms"
+        dse = ""
+        if "regions" in new:
+            dse = (f", dse r={new['regions']} "
+                   f"inner {new['inner_dse_s']*1e3:.1f}ms "
+                   f"outer {new['outer_dse_s']*1e3:.1f}ms")
         print(f"{arm}: wall {old['wall_s']:.3f}s -> {new['wall_s']:.3f}s "
               f"({ratio:.2f}x), qor {old['total_s']*1e3:.3f}ms -> "
-              f"{new['total_s']*1e3:.3f}ms{plan}{pre}{fuse}{ver}")
+              f"{new['total_s']*1e3:.3f}ms{plan}{pre}{fuse}{ver}{dse}")
         if (ratio > threshold
                 and new["wall_s"] - old["wall_s"] > min_delta_s):
             failures.append(

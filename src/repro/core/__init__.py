@@ -14,9 +14,11 @@ from .ir import (AccessMap, Buffer, Graph, GraphTopology, MemoryEffect, Node,
 from .lower import fallback_schedule, lower_to_structural
 from .multi_producer import eliminate_multi_producers
 from .optimize import Degradation, OptimizeReport, optimize
-from .parallelize import best_uniform, parallelize
+from .parallelize import (RegionEntry, RegionSummary, best_uniform,
+                          parallelize)
 from .plan import ShardingPlan, build_plan, project_rules, replicated_plan
-from .rewrite import GraphRewriteSession, RewriteError, ScheduleRewriteSession
+from .rewrite import (GraphRewriteSession, RegionSpec, RewriteError,
+                      ScheduleRewriteSession, dse_regions)
 from .verify import VerifyError, VerifyIssue, VerifyReport, verify
 
 __all__ = [
@@ -32,6 +34,7 @@ __all__ = [
     "Degradation", "fallback_schedule",
     "build_lm_graph",
     "GraphRewriteSession", "ScheduleRewriteSession", "RewriteError",
+    "RegionSpec", "dse_regions", "RegionSummary", "RegionEntry",
     "verify", "VerifyReport", "VerifyIssue", "VerifyError",
     "inject_faults", "fault_point", "active_injector", "FaultInjector",
     "InjectedFault",

@@ -38,6 +38,8 @@ site                 location
 ``dse.node``         per per-node DSE in ``parallelize``
 ``dse.score``        proposal scoring (corruption site: perturbs QoR)
 ``dse.joint``        per joint beam move in ``parallelize``
+``dse.inner``        per region inner search in the hierarchical DSE
+``dse.outer``        outer composition entry + per combo swap move
 ``plan.build``       ``build_plan`` entry
 ``plan.project``     per-buffer projection in ``project_rules``
 ``plan.delta``       ``ShardingPlan.apply_rule_change`` entry

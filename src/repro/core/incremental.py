@@ -500,6 +500,11 @@ class IncrementalEstimator:
                 changed += 1
         return changed
 
+    def region_view(self, names) -> "RegionView":
+        """A :class:`RegionView` scoped to ``names`` — the hierarchical
+        DSE's window onto this estimator for one dispatch region."""
+        return RegionView(self, names)
+
     # -- queries -------------------------------------------------------------
 
     @property
@@ -556,6 +561,67 @@ class IncrementalEstimator:
         cost.sync_bytes = sum(self._sync)
         cost.hbm_bytes_per_device = self.hbm_bytes_per_device
         return cost
+
+
+class RegionView:
+    """Region-scoped window onto a shared :class:`IncrementalEstimator`.
+
+    The hierarchical DSE solves each dispatch region on the *whole*
+    estimator (so totals stay bit-identical to the batch reference) but
+    snapshots, restores and rolls up only its own node subset — the
+    complement is frozen by protocol while a region is being searched.
+    All rollups are O(region) reads of the estimator's cached terms.
+    """
+
+    def __init__(self, est: IncrementalEstimator, names):
+        self.est = est
+        # Schedule order, so float re-summation matches the batch walk
+        # restricted to the region.
+        self._ids = sorted(est._idx[nm] for nm in names)
+        self.names = tuple(est._nodes[i].name for i in self._ids)
+        inside = set(self._ids)
+        #: edge indices with exactly one endpoint inside the region —
+        #: the only reshard terms the outer composition level re-scores.
+        self._boundary_edges = tuple(
+            e for e, edge in enumerate(est._edges)
+            if (edge.src in inside) != (edge.dst in inside))
+
+    def snapshot(self) -> Snapshot:
+        """Region-restricted assignment fragment (keys ⊆ region names)."""
+        return {self.est._nodes[i].name:
+                (dict(self.est._nodes[i].axis_map),
+                 dict(self.est._nodes[i].unroll))
+                for i in self._ids}
+
+    def restore(self, frag: Snapshot) -> int:
+        """Re-apply a region fragment, touching only differing nodes
+        (O(diff × deg)); nodes outside the region are never written."""
+        changed = 0
+        for i in self._ids:
+            n = self.est._nodes[i]
+            axis_map, unroll = frag[n.name]
+            if n.axis_map != axis_map or n.unroll != unroll:
+                self.est.apply(n.name, dict(axis_map), dict(unroll))
+                changed += 1
+        return changed
+
+    @property
+    def latency_s(self) -> float:
+        """Sum of the region nodes' cached roofline latencies."""
+        return sum(self.est._lat[i] for i in self._ids)
+
+    @property
+    def hbm_bytes(self) -> int:
+        """Region HBM footprint (per device), from the cached terms."""
+        hbm = 0.0
+        for i in self._ids:
+            hbm += self.est._nbytes[i]
+        return int(hbm)
+
+    @property
+    def boundary_reshard_bytes(self) -> int:
+        """Reshard bytes currently paid on the region's border edges."""
+        return sum(self.est._contrib[e] for e in self._boundary_edges)
 
 
 def _axes_product(mesh: MeshSpec, axes: tuple[str, ...]) -> int:

@@ -43,11 +43,24 @@ from .multi_producer import MultiProducerStats, eliminate_multi_producers
 from .parallelize import ParallelizeResult, best_uniform, parallelize
 from .plan import (ShardingPlan, build_plan, project_rules,
                    replicated_plan)
+from .rewrite import dse_regions
 from .verify import VerifyReport, verify
 
 
 def _exc(e: BaseException) -> str:
     return f"{type(e).__name__}: {e}"
+
+
+def _floor_regions(sched: Schedule):
+    """Region partition for the region-aware QoR floor — best-effort:
+    the floor must stay serviceable even when the topology is the thing
+    that broke, so any partition failure degrades to the whole-schedule
+    floor (``regions=None``) instead of raising."""
+    try:
+        regs = dse_regions(sched)
+        return regs if len(regs) > 1 else None
+    except Exception:
+        return None
 
 
 @dataclass(frozen=True)
@@ -87,6 +100,13 @@ class OptimizeReport:
     #: wall time of the exit legality check (verify + any repair rungs);
     #: benchmarks/bench_compile_time gates it staying ≪ pre_dse_s.
     verify_s: float = 0.0
+    #: per-level DSE wall time (hierarchical mode: inner = per-region
+    #: searches, outer = inter-region composition; both 0.0 on the flat
+    #: path) and the number of regions the schedule was partitioned into
+    #: — benchmarks/bench_compile_time reports all three per arm.
+    inner_dse_s: float = 0.0
+    outer_dse_s: float = 0.0
+    regions: int = 1
     #: every degradation-ladder rung that fired, in pipeline order —
     #: empty on a clean compile.
     degradations: list[Degradation] = field(default_factory=list)
@@ -114,7 +134,8 @@ def optimize(graph: Graph, mesh: MeshSpec, *,
              beam_width: int = 8, joint_radius: int = 1,
              sweep_workers: int | None = None,
              seed_uniform: bool | None = None,
-             budget_s: float | None = None
+             budget_s: float | None = None,
+             dse_mode: str = "hierarchical"
              ) -> tuple[Schedule, ShardingPlan, OptimizeReport]:
     """Run the five-step HIDA-OPT pipeline and derive the sharding plan.
 
@@ -144,7 +165,13 @@ def optimize(graph: Graph, mesh: MeshSpec, *,
             and the best-so-far snapshot is returned (recorded as a
             ``dse`` degradation).  The pre-DSE passes and plan
             derivation always run — they are cheap and required for a
-            legal result.  ``None`` (default) never interrupts.
+            legal result.  ``None`` (default) never interrupts.  In
+            hierarchical mode the budget is split adaptively between the
+            inner (per-region) and outer (composition) DSE levels.
+        dse_mode: ``"hierarchical"`` (default) or ``"flat"`` — see
+            :func:`repro.core.parallelize.parallelize`.  The flat beam
+            is the differential-testing oracle; both modes share every
+            rung of the degradation ladder.
 
     Returns:
         ``(schedule, plan, report)``: the parallelized Structural
@@ -210,13 +237,17 @@ def optimize(graph: Graph, mesh: MeshSpec, *,
             max_parallel_factor=max_parallel_factor,
             beam_width=beam_width, joint_radius=joint_radius,
             sweep_workers=sweep_workers, deadline=deadline,
+            dse_mode=dse_mode,
             # Joint uniform moves are a CA concept: keep the legacy escape
             # hatch suppressed in the CA-off ablation arm, as before.
             seed_uniform=(seed_uniform if ca or seed_uniform is None
                           else False))
+        report.inner_dse_s = report.parallelize.inner_dse_s
+        report.outer_dse_s = report.parallelize.outer_dse_s
+        report.regions = report.parallelize.regions
         for msg in report.parallelize.degraded:
-            degrade("dse", "beam fell back to its best pre-failure "
-                    "snapshot", msg)
+            degrade("dse", "DSE degradation; best pre-failure snapshot "
+                    "kept", msg)
         if report.parallelize.budget_expired:
             degrade("dse", "wall-clock budget expired; best-so-far "
                     "snapshot returned")
@@ -233,7 +264,8 @@ def optimize(graph: Graph, mesh: MeshSpec, *,
         try:
             _assign, report.cost = best_uniform(
                 sched, mesh, max_parallel_factor=max_parallel_factor,
-                ia=ia, training=training)
+                ia=ia, training=training,
+                regions=_floor_regions(sched))
         except Exception as e2:
             degrade("dse", "uniform fallback failed; cleared all "
                     "assignments (replicated)", _exc(e2))
@@ -247,9 +279,13 @@ def optimize(graph: Graph, mesh: MeshSpec, *,
     # ---- QoR floor.  Corrupted proposal scores (fault injection) or a
     # budget-interrupted beam can leave an assignment the *true* model
     # rates worse than the uniform family; re-check on the clean batch
-    # path and keep the better one.  Skipped on clean compiles — the
-    # beam already seeds with the uniform family, so the floor holds by
-    # construction and the zero-fault path stays bit-identical.
+    # path and keep the better one.  The floor is **region-aware**
+    # (per-region uniform refinement over the same partition the
+    # hierarchical DSE searches), so one degraded region cannot drag the
+    # composed plan below the whole-schedule floor.  Skipped on clean
+    # compiles — the beam already seeds with the uniform family, so the
+    # floor holds by construction and the zero-fault path stays
+    # bit-identical.
     if not dse_fell_back and (report.degradations
                               or active_injector() is not None):
         saved = {n.name: (dict(n.axis_map), dict(n.unroll))
@@ -258,7 +294,8 @@ def optimize(graph: Graph, mesh: MeshSpec, *,
             true_cost = estimate(sched, mesh, training=training)
             _assign, ucost = best_uniform(
                 sched, mesh, max_parallel_factor=max_parallel_factor,
-                ia=ia, training=training)
+                ia=ia, training=training,
+                regions=_floor_regions(sched))
             if ucost.total_s < true_cost.total_s:
                 report.cost = ucost
                 degrade("qor-floor",

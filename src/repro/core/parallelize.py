@@ -98,6 +98,7 @@ from .estimator import MeshSpec, ScheduleCost, estimate
 from .faults import corrupt_value, fault_point
 from .incremental import IncrementalEstimator, Snapshot
 from .ir import Node, Schedule
+from .rewrite import RegionSpec, dse_regions
 
 # Mesh-axis affinity by loop-dim name: which axes a dim may take, in
 # preference order.  Batch-like dims soak up the pure-DP axes; everything
@@ -332,7 +333,8 @@ def _uniform_assignments(sched: Schedule) -> list[dict[str, tuple[str, ...]]]:
 
 def best_uniform(sched: Schedule, mesh: MeshSpec, *,
                  max_parallel_factor: int | None = None,
-                 ia: bool = True, training: bool = True
+                 ia: bool = True, training: bool = True,
+                 regions: "list[RegionSpec] | None" = None
                  ) -> tuple[dict[str, tuple[str, ...]], ScheduleCost]:
     """Apply the best member of the uniform-assignment family (including
     the all-replicated empty assignment) to ``sched`` in place and return
@@ -342,14 +344,27 @@ def best_uniform(sched: Schedule, mesh: MeshSpec, *,
     reference: it deliberately bypasses the incremental engine and every
     fault-injection site — plain proposal application plus the batch
     :func:`~repro.core.estimator.estimate` — so it stays serviceable when
-    the machinery above it is the thing that failed."""
+    the machinery above it is the thing that failed.
+
+    With ``regions`` (a :func:`~repro.core.rewrite.dse_regions`
+    partition), the floor is **region-aware**: after the whole-schedule
+    scan, one coordinate-descent pass re-tries the strongest uniform
+    layouts *per region* (complement held fixed) and keeps strict
+    improvements.  The result can only be ≤ the whole-schedule floor, so
+    a single degraded region can no longer drag the composed plan below
+    the old floor.  The returned ``assignment`` is still the best
+    whole-schedule family member (the in-place state may be a per-region
+    mix of family members)."""
     max_pf = max_parallel_factor or mesh.chips
     pf = parallel_factors(sched, max_pf, ia)
+    uniforms = [{}] + _uniform_assignments(sched)
     best: tuple[ScheduleCost, dict, dict] | None = None
-    for assign in [{}] + _uniform_assignments(sched):
+    scored: list[tuple[float, int]] = []
+    for ui, assign in enumerate(uniforms):
         for n in sched.nodes:
             _apply(n, _uniform_proposal(n, assign, pf[n.name], mesh), mesh)
         cost = estimate(sched, mesh, training=training)
+        scored.append((cost.total_s, ui))
         if best is None or cost.total_s < best[0].total_s:
             best = (cost, assign,
                     {n.name: (dict(n.axis_map), dict(n.unroll))
@@ -357,7 +372,170 @@ def best_uniform(sched: Schedule, mesh: MeshSpec, *,
     cost, assign, state = best
     for n in sched.nodes:
         n.axis_map, n.unroll = state[n.name]
+
+    if regions and len(regions) > 1:
+        # Per-region refinement over the few strongest family members
+        # (plus the replicated layout) — bounded at regions × 4 batch
+        # estimates so the floor stays serviceable as a fallback.
+        scored.sort()
+        retry = [uniforms[ui] for _s, ui in scored[:3]]
+        if uniforms[0] not in retry:
+            retry.append(uniforms[0])
+        node_by_name = {n.name: n for n in sched.nodes}
+        for spec in regions:
+            rnodes = [node_by_name[nm] for nm in spec.nodes
+                      if nm in node_by_name]
+            if not rnodes:
+                continue
+            keep = {n.name: (dict(n.axis_map), dict(n.unroll))
+                    for n in rnodes}
+            for rassign in retry:
+                for n in rnodes:
+                    _apply(n, _uniform_proposal(n, rassign, pf[n.name],
+                                                mesh), mesh)
+                c = estimate(sched, mesh, training=training)
+                if c.total_s < cost.total_s:
+                    cost = c
+                    keep = {n.name: (dict(n.axis_map), dict(n.unroll))
+                            for n in rnodes}
+            for n in rnodes:
+                n.axis_map, n.unroll = keep[n.name]
     return assign, cost
+
+
+# --------------------------------------------------------------------------
+# Region summaries (the inner→outer interface of the hierarchical DSE)
+# --------------------------------------------------------------------------
+
+def _tuplify(x):
+    """Recursively convert lists to tuples (JSON round-trip helper)."""
+    if isinstance(x, list):
+        return tuple(_tuplify(v) for v in x)
+    return x
+
+
+def _listify(x):
+    """Recursively convert tuples to lists (inverse of :func:`_tuplify`)."""
+    if isinstance(x, tuple):
+        return [_listify(v) for v in x]
+    return x
+
+
+def _frag_sig(frag: Snapshot) -> tuple:
+    """Canonical signature of an assignment fragment (``axis_map`` only —
+    ``unroll`` is derived from it under a fixed mesh)."""
+    return tuple(sorted(
+        (nm, tuple(sorted((d, tuple(axes)) for d, axes in am.items())))
+        for nm, (am, _ur) in frag.items()))
+
+
+def _region_boundary_sig(spec: RegionSpec,
+                         conn_by_edge: dict, buffers: dict) -> tuple:
+    """Renaming-stable signature of a region's boundary connections:
+    per crossing edge, its direction relative to the region, the shared
+    buffer's shape/bytes, and the connection's (dim, stride) axis pairs.
+    No node or buffer *names* enter the signature, so renaming every node
+    in the schedule leaves it bit-identical (``tests/test_hierarchical``
+    pins this)."""
+    inside = set(spec.nodes)
+    sig = []
+    for s, d, bname in spec.boundary:
+        direction = "in" if d in inside else "out"
+        buf = buffers[bname]
+        c = conn_by_edge.get((s, d, bname))
+        axes = () if c is None else tuple(
+            (sd or "", str(ss), dd or "", str(ds))
+            for sd, ss, dd, ds in c.axes)
+        sig.append((direction, tuple(buf.shape), buf.bytes, axes))
+    return tuple(sorted(sig))
+
+
+@dataclass
+class RegionEntry:
+    """One candidate assignment for a region, as scored by its inner
+    search with the complement of the schedule held at the converged
+    greedy state."""
+
+    #: region-restricted assignment fragment (keys = region node names).
+    assignment: Snapshot
+    #: whole-schedule QoR with this fragment applied (complement greedy).
+    total_s: float
+    #: incremental QoR delta vs. the all-greedy schedule (≤ 0 is a win).
+    delta_s: float
+    #: whole-schedule HBM bytes/device with this fragment applied.
+    hbm_bytes: int
+    #: region-scoped HBM footprint of this fragment.
+    region_hbm_bytes: int
+    #: "greedy" | "uniform" | "search".
+    origin: str
+
+    def key(self) -> tuple[float, int]:
+        return (self.total_s, self.hbm_bytes)
+
+    def to_dict(self) -> dict:
+        return {
+            "assignment": {
+                nm: {"axis_map": {d: list(axes)
+                                  for d, axes in am.items()},
+                     "unroll": dict(ur)}
+                for nm, (am, ur) in self.assignment.items()},
+            "total_s": self.total_s, "delta_s": self.delta_s,
+            "hbm_bytes": self.hbm_bytes,
+            "region_hbm_bytes": self.region_hbm_bytes,
+            "origin": self.origin}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RegionEntry":
+        return cls(
+            assignment={
+                nm: ({dim: tuple(axes)
+                      for dim, axes in st["axis_map"].items()},
+                     {dim: int(f) for dim, f in st["unroll"].items()})
+                for nm, st in d["assignment"].items()},
+            total_s=d["total_s"], delta_s=d["delta_s"],
+            hbm_bytes=d["hbm_bytes"],
+            region_hbm_bytes=d["region_hbm_bytes"], origin=d["origin"])
+
+
+@dataclass
+class RegionSummary:
+    """What one region's inner search hands the outer composition level:
+    its top-k entries (best first, the converged-greedy entry always
+    present), the renaming-stable boundary-connection signature, and the
+    region's resource footprint.  JSON round-trips exactly through
+    :meth:`to_dict` / :meth:`from_dict`."""
+
+    index: int
+    nodes: tuple[str, ...]
+    entries: list[RegionEntry]
+    boundary_sig: tuple
+    #: region-scoped HBM footprint at the greedy entry.
+    hbm_bytes: int
+    #: wall time of this region's inner search.
+    inner_s: float = 0.0
+    #: non-empty when the inner search failed and the region was pinned
+    #: to its greedy/uniform entries (the ``dse.inner`` ladder rung).
+    degraded: str = ""
+
+    def greedy_index(self) -> int:
+        return next(i for i, e in enumerate(self.entries)
+                    if e.origin == "greedy")
+
+    def to_dict(self) -> dict:
+        return {"index": self.index, "nodes": list(self.nodes),
+                "entries": [e.to_dict() for e in self.entries],
+                "boundary_sig": _listify(self.boundary_sig),
+                "hbm_bytes": self.hbm_bytes, "inner_s": self.inner_s,
+                "degraded": self.degraded}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RegionSummary":
+        return cls(index=d["index"], nodes=tuple(d["nodes"]),
+                   entries=[RegionEntry.from_dict(e)
+                            for e in d["entries"]],
+                   boundary_sig=_tuplify(d["boundary_sig"]),
+                   hbm_bytes=d["hbm_bytes"], inner_s=d["inner_s"],
+                   degraded=d["degraded"])
 
 
 @dataclass
@@ -387,6 +565,18 @@ class ParallelizeResult:
     #: True when the wall-clock ``deadline`` expired and the search
     #: returned its best-so-far snapshot instead of running to fixpoint.
     budget_expired: bool = False
+    #: which DSE actually ran: "flat" (the whole-schedule beam, also the
+    #: single-region / ablation path) or "hierarchical".
+    dse_mode: str = "flat"
+    #: number of regions the hierarchical DSE partitioned the schedule
+    #: into (1 when the flat beam ran).
+    regions: int = 1
+    #: per-region inner-search summaries (hierarchical mode only).
+    region_summaries: list[RegionSummary] = field(default_factory=list)
+    #: wall time of the inner (per-region) level of the hierarchical DSE.
+    inner_dse_s: float = 0.0
+    #: wall time of the outer (inter-region composition) level.
+    outer_dse_s: float = 0.0
 
 
 def parallelize(sched: Schedule, mesh: MeshSpec, *,
@@ -399,7 +589,8 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
                 sweep_workers: int | None = None,
                 colored_sweeps: bool = True,
                 seed_uniform: bool | None = None,
-                deadline: float | None = None) -> ParallelizeResult:
+                deadline: float | None = None,
+                dse_mode: str = "hierarchical") -> ParallelizeResult:
     """Paper Section 6.5 steps 1-4 over a Structural schedule (in place).
 
     Steps 1-3 follow the paper; step 4 runs the paper's greedy
@@ -451,7 +642,19 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
             The initial greedy pass always completes — a full assignment
             must exist before "best so far" means anything.  ``None``
             (the default) never interrupts.
+        dse_mode: ``"hierarchical"`` (default) runs the two-level DSE —
+            per-region inner beams (:func:`~repro.core.rewrite.dse_regions`
+            partition) composed by an inter-region outer beam over
+            :class:`RegionSummary` entries, with the ``deadline`` budget
+            split adaptively between the levels.  ``"flat"`` forces the
+            whole-schedule beam (the differential-testing oracle —
+            ``tests/test_hierarchical.py`` asserts hierarchical QoR ≤
+            flat QoR on every config).  Schedules the partitioner leaves
+            whole (or the CA-off / ``beam_width<=1`` arms) always take
+            the flat path, bit-identically to ``dse_mode="flat"``.
     """
+    if dse_mode not in ("hierarchical", "flat"):
+        raise ValueError(f"unknown dse_mode {dse_mode!r}")
     if seed_uniform is not None:
         warnings.warn(
             "parallelize(seed_uniform=...) is deprecated: the beam search "
@@ -636,15 +839,28 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
                     changed.append(node.name)
         return changed, len(classes)
 
-    def converge(dirty: set[str], max_sweeps: int, tag: str) -> None:
+    def converge(dirty: set[str], max_sweeps: int, tag: str,
+                 within: set[str] | None = None,
+                 until: float | None = None) -> None:
         """Full-order coordinate descent to a fixpoint: every sweep covers
         the *whole* current frontier (no first-change short-circuit) and
         re-dirties the affected sets of whatever changed.  Under a
         ``deadline`` each sweep boundary is an interruption point —
-        committed state is always a complete, consistent assignment."""
+        committed state is always a complete, consistent assignment.
+
+        ``within`` restricts the descent to one region: the frontier and
+        every re-dirtied set are intersected with it, so nodes outside
+        are never touched (the hierarchical DSE's inner level — the
+        complement is frozen by protocol).  ``until`` is a sub-deadline
+        for this call only (a region's share of the inner budget);
+        ``res.budget_expired`` is raised only when the *global* deadline
+        is the one that passed."""
+        stop_at = deadline if until is None else until
         for s in range(max_sweeps):
-            if deadline is not None and time.perf_counter() >= deadline:
-                res.budget_expired = True
+            if stop_at is not None and time.perf_counter() >= stop_at:
+                if deadline is not None \
+                        and time.perf_counter() >= deadline:
+                    res.budget_expired = True
                 res.log.append(f"{tag} sweep{s + 1}: budget expired")
                 break
             frontier = [n for n in ordered if n.name in dirty]
@@ -660,6 +876,8 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
             dirty = set()
             for name in changed:
                 dirty |= affected[name]
+            if within is not None:
+                dirty &= within
 
     try:
         # ---- greedy phase: the paper's most-connected-first pass, then
@@ -679,10 +897,14 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
         def apply_uniform(assign: dict[str, tuple[str, ...]]) -> None:
             """One joint move of radius ∞: the same axis→dim layout applied to
             every node at once (routed through the incremental engine, so each
-            candidate costs O(edges), not a batch re-estimate)."""
+            candidate costs O(edges), not a batch re-estimate).  Nodes whose
+            quantized proposal already matches their live assignment are
+            skipped — consecutive family members share most of their
+            per-node layouts, so sweeps over the family are diff-priced."""
             for n in sched.nodes:
-                est.apply(n.name, _uniform_proposal(
-                    n, assign, res.pf[n.name], mesh))
+                prop = _uniform_proposal(n, assign, res.pf[n.name], mesh)
+                if prop != n.axis_map:
+                    est.apply(n.name, prop)
 
         def uniform_candidates() -> list[dict[str, tuple[str, ...]]]:
             return _uniform_assignments(sched)
@@ -698,14 +920,17 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
             seen.discard(origin)
             return [n.name for n in ordered if n.name in seen]
 
-        # ---- beam phase: joint multi-node proposals.  The whole phase —
-        # seeding, rounds, refinement — runs inside one error boundary:
-        # the beam is an *optimization* over the converged greedy state,
-        # never a correctness dependency, so any failure inside it
-        # restores the best fully-committed snapshot seen so far (at
-        # worst the greedy one) and the compile proceeds.
+        # ---- beam phase: joint multi-node proposals, flat or two-level.
+        # The whole phase — region partition, seeding, rounds, refinement
+        # — runs inside one error boundary: the beam is an *optimization*
+        # over the converged greedy state, never a correctness
+        # dependency, so any failure inside it restores the best
+        # fully-committed snapshot seen so far (at worst the greedy one)
+        # and the compile proceeds.
         if ca and beam_width > 1:
-            safe_key, safe_snap = greedy_key, greedy_snap
+            # Best fully-committed (key, snapshot) seen anywhere in the
+            # phase — the error boundary restores it on failure.
+            safe: list = [greedy_key, greedy_snap]
 
             def expired() -> bool:
                 if deadline is not None and time.perf_counter() >= deadline:
@@ -713,7 +938,23 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
                     return True
                 return False
 
-            try:
+            region_specs: list[RegionSpec] = []
+            if dse_mode == "hierarchical":
+                try:
+                    region_specs = dse_regions(sched)
+                except Exception as e:
+                    res.log.append(
+                        f"region partition failed "
+                        f"({type(e).__name__}: {e}); flat beam")
+                if len(region_specs) < 2:
+                    # Single-region schedules take the flat path —
+                    # bit-identical to dse_mode="flat" by construction.
+                    region_specs = []
+
+            def run_flat() -> None:
+                """Whole-schedule beam over joint moves — the original
+                flat search, kept as the differential-testing oracle
+                (``dse_mode="flat"``) and the single-region path."""
                 def sig(snap: Snapshot):
                     return tuple(sorted(
                         (nm, tuple(sorted((d, axes)
@@ -735,8 +976,8 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
                 beam = sorted(states.values(),
                               key=lambda t: t[0])[:beam_width]
                 best_key = beam[0][0]
-                if best_key < safe_key:
-                    safe_key, safe_snap = beam[0]
+                if best_key < safe[0]:
+                    safe[:] = beam[0]
                 res.log.append(
                     f"beam init: {len(states)} states, best "
                     f"{best_key[0]*1e3:.3f}ms"
@@ -792,8 +1033,8 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
                     res.log.append(
                         f"beam round {rnd + 1}: {len(successors)} states, "
                         f"best {beam[0][0][0]*1e3:.3f}ms")
-                    if beam[0][0] < safe_key:
-                        safe_key, safe_snap = beam[0]
+                    if beam[0][0] < safe[0]:
+                        safe[:] = beam[0]
                     if not beam[0][0] < best_key:
                         break
                     best_key = beam[0][0]
@@ -810,12 +1051,348 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
                     final_key = beam[0][0]
                 if greedy_key < final_key:
                     est.restore(greedy_snap)
+
+            def run_hier() -> None:
+                """Two-level DSE: per-region inner beams composed by an
+                inter-region outer beam (HIDA §4 — solve each region's
+                local design space, compose summaries one level up)."""
+                res.dse_mode = "hierarchical"
+                res.regions = len(region_specs)
+                t_inner0 = time.perf_counter()
+                conn_by_edge = {(c.src, c.dst, c.buffer): c for c in conns}
+                uniforms = uniform_candidates()
+
+                # Score the global uniform family once: the outer level
+                # seeds with these snapshots verbatim (the flat beam's
+                # uniform seeds), and the inner level quantizes only the
+                # strongest few per region — quantizing all ~O(dims ×
+                # axes) members per region is where a naive inner level
+                # spends most of its time.
+                scored_uniforms: list[tuple[tuple, Snapshot, dict]] = []
+                for a in uniforms:
+                    if expired():
+                        break
+                    apply_uniform(a)
+                    scored_uniforms.append(
+                        ((est.total_s, est.hbm_bytes_per_device),
+                         est.snapshot(), a))
+                est.restore(greedy_snap)
+                inner_uniforms = [
+                    a for _k, _s, a in sorted(
+                        scored_uniforms, key=lambda t: t[0])[:6]]
+                region_topk = 4
+                inner_origins = 2
+                # Bound the *total* deepening work, not the per-region
+                # work: many small regions each get a shallow beam, few
+                # large regions get the full flat-beam expansion width.
+                inner_seeds = max(1, min(beam_width // 2,
+                                         (2 * beam_width)
+                                         // len(region_specs)))
+                joint_runners = 2
+
+                # Budget split: the inner level gets INNER_SHARE of the
+                # remaining budget, sliced across regions on an absolute
+                # timeline (a region finishing early donates its slack to
+                # the next); the outer level keeps the rest, and the
+                # adaptive re-search below spends outer leftovers on the
+                # most uncertain region.
+                INNER_SHARE = 0.6
+                if deadline is not None:
+                    inner_until = min(
+                        deadline,
+                        t_inner0
+                        + max(0.0, deadline - t_inner0) * INNER_SHARE)
+                else:
+                    inner_until = None
+
+                summaries: list[RegionSummary] = []
+                for spec in region_specs:
+                    t_r = time.perf_counter()
+                    r_until = None
+                    if inner_until is not None:
+                        r_until = (t_inner0
+                                   + (inner_until - t_inner0)
+                                   * (spec.index + 1) / len(region_specs))
+
+                    def r_expired() -> bool:
+                        return (expired()
+                                or (r_until is not None
+                                    and time.perf_counter() >= r_until))
+
+                    rnames = set(spec.nodes)
+                    view = est.region_view(spec.nodes)
+                    r_nodes = [n for n in ordered if n.name in rnames]
+                    greedy_frag = view.snapshot()
+                    entries: dict[tuple, RegionEntry] = {}
+
+                    def note(origin: str) -> None:
+                        frag = view.snapshot()
+                        e = RegionEntry(
+                            assignment=frag, total_s=est.total_s,
+                            delta_s=est.total_s - greedy_key[0],
+                            hbm_bytes=est.hbm_bytes_per_device,
+                            region_hbm_bytes=view.hbm_bytes,
+                            origin=origin)
+                        k = _frag_sig(frag)
+                        old = entries.get(k)
+                        if old is None:
+                            entries[k] = e
+                        elif e.key() < old.key():
+                            # Same fragment against the same complement
+                            # scores identically; keep the greedy label.
+                            if old.origin == "greedy":
+                                e.origin = "greedy"
+                            entries[k] = e
+
+                    degraded_note = ""
+                    try:
+                        fault_point("dse.inner")
+                        note("greedy")
+                        # Region quantizations of the strongest uniform
+                        # family members (the full family still seeds
+                        # the outer level as whole-schedule states).
+                        seen_frags: set = set()
+                        for a in inner_uniforms:
+                            frag: Snapshot = {}
+                            for n in r_nodes:
+                                prop = _uniform_proposal(
+                                    n, a, res.pf[n.name], mesh)
+                                unroll = {
+                                    d: math.prod(mesh.size(x)
+                                                 for x in axes)
+                                    for d, axes in prop.items()}
+                                frag[n.name] = (prop, unroll)
+                            k = _frag_sig(frag)
+                            if k in seen_frags:
+                                continue
+                            seen_frags.add(k)
+                            view.restore(frag)
+                            note("uniform")
+                        # Deepen the strongest entries: region-scoped
+                        # coordinate descent + within-region joint moves.
+                        seeds = sorted(entries.values(),
+                                       key=RegionEntry.key)[:inner_seeds]
+                        for seed in seeds:
+                            if r_expired():
+                                break
+                            view.restore(seed.assignment)
+                            if seed.origin != "greedy":
+                                # (The greedy entry is already a global
+                                # coordinate-descent fixpoint.)  One
+                                # region-scoped sweep: the outer winner
+                                # gets the full refinement afterwards.
+                                converge(set(rnames), max_sweeps=1,
+                                         tag=f"inner r{spec.index}",
+                                         within=rnames, until=r_until)
+                                note("search")
+                            base = view.snapshot()
+                            mm = est.mismatched_nodes()
+                            origins = sorted(
+                                (n for n in r_nodes
+                                 if proposals_for(n)),
+                                key=lambda n: (
+                                    n.name not in mm,
+                                    -est.node_latency_s(n.name)))
+                            for node in origins[:inner_origins]:
+                                if r_expired():
+                                    break
+                                ranked, evaluated, rejected = rank_node(
+                                    node, all_names, joint_runners + 1)
+                                res.evaluated += evaluated
+                                res.rejected_constraint += rejected
+                                tried = 0
+                                for _pk, prop, unroll in ranked:
+                                    if prop == node.axis_map:
+                                        continue
+                                    if tried >= joint_runners:
+                                        break
+                                    tried += 1
+                                    res.joint_moves += 1
+                                    est.apply(node.name, prop, unroll)
+                                    for m in neighborhood(node.name,
+                                                          joint_radius):
+                                        if m in rnames:
+                                            dse_node(sched.node(m),
+                                                     all_names)
+                                    note("search")
+                                    view.restore(base)
+                    except Exception as exc:
+                        degraded_note = f"{type(exc).__name__}: {exc}"
+                        res.degraded.append(
+                            f"inner DSE failed on region {spec.index} "
+                            f"({degraded_note}); region pinned to its "
+                            "greedy/uniform entries")
+                        res.log.append(res.degraded[-1])
+                    finally:
+                        # The complement of later regions must see this
+                        # region at greedy — entries are scored against
+                        # an all-greedy complement by protocol.
+                        view.restore(greedy_frag)
+                    if not entries:
+                        # dse.inner fired before the greedy entry landed.
+                        entries[_frag_sig(greedy_frag)] = RegionEntry(
+                            assignment=greedy_frag,
+                            total_s=greedy_key[0], delta_s=0.0,
+                            hbm_bytes=greedy_key[1],
+                            region_hbm_bytes=view.hbm_bytes,
+                            origin="greedy")
+                    ranked_entries = sorted(entries.values(),
+                                            key=RegionEntry.key)
+                    top = ranked_entries[:region_topk]
+                    if not any(e.origin == "greedy" for e in top):
+                        top.append(next(e for e in ranked_entries
+                                        if e.origin == "greedy"))
+                    summaries.append(RegionSummary(
+                        index=spec.index, nodes=spec.nodes, entries=top,
+                        boundary_sig=_region_boundary_sig(
+                            spec, conn_by_edge, sched.buffers),
+                        hbm_bytes=view.hbm_bytes,
+                        inner_s=time.perf_counter() - t_r,
+                        degraded=degraded_note))
+                res.region_summaries = summaries
+                res.inner_dse_s = time.perf_counter() - t_inner0
+                res.log.append(
+                    "inner level: "
+                    + ", ".join(f"r{s.index}:{len(s.entries)}e"
+                                + ("!" if s.degraded else "")
+                                for s in summaries))
+
+                # ---- outer level: compose one entry per region.  A
+                # combo is a tuple of entry indices; scoring re-applies
+                # only the differing fragments (O(diff × deg) via
+                # est.restore) — boundary resharding and the composed
+                # footprint come out of the same topology-cached edge
+                # terms the flat beam scores with.
+                t_outer0 = time.perf_counter()
+                fault_point("dse.outer")
+                combo_keys: dict[tuple[int, ...], tuple] = {}
+
+                def eval_combo(combo: tuple[int, ...]) -> tuple:
+                    key = combo_keys.get(combo)
+                    if key is not None:
+                        return key
+                    snap = dict(greedy_snap)
+                    for summ, ei in zip(summaries, combo):
+                        snap.update(summ.entries[ei].assignment)
+                    est.restore(snap)
+                    key = (est.total_s, est.hbm_bytes_per_device)
+                    combo_keys[combo] = key
+                    return key
+
+                greedy_combo = tuple(s.greedy_index() for s in summaries)
+                eval_combo(greedy_combo)
+                eval_combo(tuple(0 for _ in summaries))
+                # Global uniform states: a truncated family member may
+                # not be expressible as a combo, so seed the flat beam's
+                # uniform states directly (scored once, up front) — the
+                # outer winner can never lose to a uniform layout.
+                extra: list[tuple[tuple, Snapshot]] = [
+                    (k, snap) for k, snap, _a in scored_uniforms]
+
+                expand_states = max(1, beam_width // 2)
+                # Regions with the widest entry spread first: that is
+                # where composition choices move the total the most.
+                region_order = sorted(
+                    range(len(summaries)),
+                    key=lambda r: (-(summaries[r].entries[-1].total_s
+                                     - summaries[r].entries[0].total_s),
+                                   r))
+                for rnd in range(beam_rounds):
+                    if expired():
+                        res.log.append(
+                            f"outer round {rnd + 1}: budget expired")
+                        break
+                    prev_best = min(combo_keys.values())
+                    frontier = sorted(
+                        combo_keys.items(),
+                        key=lambda kv: kv[1])[:expand_states]
+                    for combo, _k in frontier:
+                        if expired():
+                            break
+                        for r in region_order:
+                            for ei in range(len(summaries[r].entries)):
+                                if ei == combo[r]:
+                                    continue
+                                cand = (combo[:r] + (ei,)
+                                        + combo[r + 1:])
+                                if cand in combo_keys:
+                                    continue
+                                fault_point("dse.outer")
+                                eval_combo(cand)
+                    best_now = min(combo_keys.values())
+                    res.log.append(
+                        f"outer round {rnd + 1}: {len(combo_keys)} "
+                        f"combos, best {best_now[0]*1e3:.3f}ms")
+                    if not best_now < prev_best:
+                        break
+                res.beam_states += len(combo_keys) + len(extra)
+
+                # Winner = best of every combo and every uniform seed.
+                win_combo = min(combo_keys,
+                                key=lambda c: combo_keys[c])
+                win_key = combo_keys[win_combo]
+                win_snap = dict(greedy_snap)
+                for summ, ei in zip(summaries, win_combo):
+                    win_snap.update(summ.entries[ei].assignment)
+                for key, snap in extra:
+                    if key < win_key:
+                        win_key, win_snap = key, snap
+                if win_key < safe[0]:
+                    safe[:] = [win_key, win_snap]
+                res.log.append(
+                    f"outer level: best {win_key[0]*1e3:.3f}ms "
+                    f"(greedy {greedy_key[0]*1e3:.3f}ms)")
+
+                # Full-schedule refinement of the winner; keep the best
+                # of {refined, winner, greedy} — hierarchical QoR can
+                # never fall below greedy QoR, exactly like the flat
+                # beam.
+                est.restore(win_snap)
+                converge(set(all_names), max_sweeps=4,
+                         tag="outer-refine")
+                final_key = (est.total_s, est.hbm_bytes_per_device)
+                if win_key < final_key:
+                    est.restore(win_snap)
+                    final_key = win_key
+                if greedy_key < final_key:
+                    est.restore(greedy_snap)
+                    final_key = greedy_key
+                if final_key < safe[0]:
+                    safe[:] = [final_key, est.snapshot()]
+
+                # Adaptive split: whatever outer budget is left goes to
+                # deepening the most uncertain region (widest entry
+                # spread) from the final composition.
+                if deadline is not None and summaries \
+                        and not expired():
+                    r = region_order[0]
+                    base_snap = est.snapshot()
+                    base_key = final_key
+                    converge(set(summaries[r].nodes), max_sweeps=3,
+                             tag=f"outer-deepen r{r}",
+                             within=set(summaries[r].nodes))
+                    k2 = (est.total_s, est.hbm_bytes_per_device)
+                    if k2 < base_key:
+                        res.log.append(
+                            f"outer-deepen r{r}: {base_key[0]*1e3:.3f}"
+                            f" -> {k2[0]*1e3:.3f}ms")
+                        if k2 < safe[0]:
+                            safe[:] = [k2, est.snapshot()]
+                    else:
+                        est.restore(base_snap)
+                res.outer_dse_s = time.perf_counter() - t_outer0
+
+            try:
+                if region_specs:
+                    run_hier()
+                else:
+                    run_flat()
             except Exception as e:
                 res.degraded.append(
                     f"beam phase failed ({type(e).__name__}: {e}); "
                     "restored best pre-failure snapshot")
                 res.log.append(res.degraded[-1])
-                est.restore(safe_snap)
+                est.restore(safe[1])
         elif seed_uniform:
             # Legacy pre-beam escape hatch (deprecated): best uniform
             # assignment, then two refinement sweeps over the full node order

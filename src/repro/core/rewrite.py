@@ -1006,6 +1006,16 @@ class ScheduleRewriteSession:
         return depth_map_over(self.sched.nodes, self._edge_list(),
                               self.sched.name)
 
+    def dse_regions(self, *, max_cut: int = 2, min_nodes: int = 3,
+                    max_nodes: int = 16) -> "list[RegionSpec]":
+        """Region partition for the hierarchical DSE over the session's
+        Δ-maintained edge list (same contract as the module-level
+        :func:`dse_regions`, without forcing a topology rebuild
+        mid-session)."""
+        return _dse_regions_over(self.sched.nodes, self._edge_list(),
+                                 self.sched.name, max_cut=max_cut,
+                                 min_nodes=min_nodes, max_nodes=max_nodes)
+
     # -- index maintenance ---------------------------------------------------
     def _touch(self, *values: str) -> None:
         self._dirty.update(values)
@@ -1343,3 +1353,113 @@ class ScheduleRewriteSession:
         def undo() -> None:
             sched.value_bytes = old
         self._undo.append(undo)
+
+
+# --------------------------------------------------------------------------
+# Region partitions for the hierarchical DSE
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RegionSpec:
+    """One contiguous slice of the schedule's topological order, exported
+    to the two-level DSE (paper Section 4: solve each dataflow node's
+    local space, compose at the inter-node level).
+
+    The partition contract (see docs/ARCHITECTURE.md):
+
+    * ``nodes`` is a contiguous run of the stable topological order —
+      every node belongs to exactly one region, and concatenating the
+      regions in ``index`` order reproduces the topo order exactly.
+    * ``boundary`` lists the shared-buffer edges with exactly one
+      endpoint inside the region (both directions), in canonical
+      topology-edge order — the only coupling the outer composition
+      level has to score.
+    * Cuts are chosen where few edges cross (layer seams in the LM
+      configs), so inner searches see almost all of their QoR terms.
+    """
+
+    index: int
+    nodes: tuple[str, ...]
+    #: (src, dst, buffer) edges crossing the region border.
+    boundary: tuple[tuple[str, str, str], ...]
+
+
+def dse_regions(sched: Schedule,
+                topology: ScheduleTopology | None = None, *,
+                max_cut: int = 2, min_nodes: int = 3,
+                max_nodes: int = 16) -> list[RegionSpec]:
+    """Partition ``sched`` into dispatch regions for the hierarchical DSE.
+
+    Walks the stable topological order and cuts at boundaries crossed by
+    at most ``max_cut`` shared-buffer edges (first such boundary once the
+    open region holds ``min_nodes``); a region is force-closed at its
+    cheapest seen boundary when it would exceed ``max_nodes``.  The walk
+    depends only on the topology (edge structure + program order), never
+    on node *names*, so the partition — and every boundary signature
+    derived from it — is stable under node renaming.
+
+    Returns a single whole-schedule region when the schedule is too small
+    to split (callers treat that as "run the flat beam").
+    """
+    topo = topology if topology is not None else sched.topology()
+    return _dse_regions_over(sched.nodes, topo.edges, sched.name,
+                             max_cut=max_cut, min_nodes=min_nodes,
+                             max_nodes=max_nodes)
+
+
+def _dse_regions_over(nodes: Sequence[Node],
+                      edge_iter: Iterable[tuple[str, str, str]],
+                      name: str, *, max_cut: int, min_nodes: int,
+                      max_nodes: int) -> list[RegionSpec]:
+    edges = list(edge_iter)
+    order = topo_order_over(nodes, edges, name)
+    names = [n.name for n in order]
+    n = len(names)
+    if n < 2 * min_nodes:
+        return [RegionSpec(index=0, nodes=tuple(names), boundary=())]
+
+    pos = {nm: i for i, nm in enumerate(names)}
+    # crossing[b] = edges spanning the boundary between order[b-1] and
+    # order[b]; an edge (s, d) crosses every boundary in (pos[s], pos[d]].
+    crossing = [0] * (n + 1)
+    for s, d, _b in edges:
+        lo, hi = pos[s], pos[d]
+        if lo > hi:
+            lo, hi = hi, lo
+        for b in range(lo + 1, hi + 1):
+            crossing[b] += 1
+
+    cuts: list[int] = []
+    start = 0
+    best_b: int | None = None  # cheapest boundary seen in the open region
+    for b in range(start + 1, n):
+        if b - start >= min_nodes and (
+                best_b is None or crossing[b] < crossing[best_b]):
+            best_b = b
+        closeable = b - start >= min_nodes and n - b >= min_nodes
+        if closeable and crossing[b] <= max_cut:
+            cuts.append(b)
+            start, best_b = b, None
+        elif b - start >= max_nodes and best_b is not None \
+                and n - best_b >= min_nodes:
+            cuts.append(best_b)
+            start, best_b = best_b, None
+    if not cuts:
+        return [RegionSpec(index=0, nodes=tuple(names), boundary=())]
+
+    bounds = [0] + cuts + [n]
+    region_of: dict[str, int] = {}
+    for r in range(len(bounds) - 1):
+        for nm in names[bounds[r]:bounds[r + 1]]:
+            region_of[nm] = r
+    boundary: list[list[tuple[str, str, str]]] = [
+        [] for _ in range(len(bounds) - 1)]
+    for s, d, bname in edges:
+        rs, rd = region_of[s], region_of[d]
+        if rs != rd:
+            boundary[rs].append((s, d, bname))
+            boundary[rd].append((s, d, bname))
+    return [
+        RegionSpec(index=r, nodes=tuple(names[bounds[r]:bounds[r + 1]]),
+                   boundary=tuple(boundary[r]))
+        for r in range(len(bounds) - 1)]

@@ -149,6 +149,90 @@ def test_chaos_sweep_dse_and_plan_only(seed):
     assert not rep.degraded("construct") and not rep.degraded("lower")
 
 
+# --------------------------------------------------------------------------
+# 1b. Hierarchical DSE chaos lane: the dse.inner / dse.outer rungs
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", (0, 1, 2))
+def test_chaos_sweep_hierarchical_dse_sites(seed):
+    """Injection restricted to the two-level DSE's own sites: the
+    pre-DSE passes run clean, and every exit is verifier-clean and
+    QoR-floored (asserted inside ``_chaos_run``)."""
+    rep = _chaos_run("xlstm-125m", seed, sites=("dse.inner", "dse.outer"))
+    assert not rep.degraded("construct") and not rep.degraded("lower")
+
+
+def test_inner_failure_degrades_only_hit_regions():
+    """``seed=0, rate=0.5`` deterministically kills two of xlstm's four
+    region inner searches.  The hit regions pin to their greedy entry;
+    the others keep their full entry lists — an inner failure never
+    degrades the whole schedule."""
+    reset_fresh_names()
+    g = build_lm_graph(get_config("xlstm-125m"), SHAPES["train_4k"])
+    with inject_faults(seed=0, rate=0.5, sites=("dse.inner",)) as inj:
+        sched, plan, rep = optimize(g, SINGLE_POD)
+    res = rep.parallelize
+    assert res.dse_mode == "hierarchical" and res.regions == 4
+    assert len(inj.fired("dse.inner")) == 2
+    hit = [s for s in res.region_summaries if s.degraded]
+    clean = [s for s in res.region_summaries if not s.degraded]
+    assert len(hit) == 2 and len(clean) == 2
+    for s in hit:
+        assert "InjectedFault" in s.degraded
+        assert [e.origin for e in s.entries] == ["greedy"]
+    # Containment: the un-hit regions still ran their full inner search.
+    assert any(len(s.entries) > 1 for s in clean)
+    # Each region failure surfaces as its own dse degradation.
+    msgs = [d.error for d in rep.degradations if d.stage == "dse"]
+    assert sum("inner DSE failed on region" in m for m in msgs) == 2
+    assert rep.verify is not None and rep.verify.ok
+    assert rep.cost.total_s <= res.greedy_total_s * (1 + 1e-9)
+
+
+def test_all_inner_failures_still_optimize_via_outer():
+    """``rate=1.0`` on ``dse.inner``: every region is pinned to its
+    (synthesized) greedy entry, yet the outer level still composes and
+    seeds the global uniform family — the result keeps the beam
+    invariant and the uniform QoR floor."""
+    reset_fresh_names()
+    g = build_lm_graph(get_config("xlstm-125m"), SHAPES["train_4k"])
+    with inject_faults(seed=0, rate=1.0, sites=("dse.inner",)) as inj:
+        sched, plan, rep = optimize(g, SINGLE_POD)
+    res = rep.parallelize
+    assert res.dse_mode == "hierarchical"
+    assert len(inj.fired("dse.inner")) == res.regions
+    assert all(s.degraded for s in res.region_summaries)
+    assert all([e.origin for e in s.entries] == ["greedy"]
+               for s in res.region_summaries)
+    assert rep.verify is not None and rep.verify.ok
+    assert rep.cost.total_s <= res.greedy_total_s * (1 + 1e-9)
+    saved = {n.name: (dict(n.axis_map), dict(n.unroll))
+             for n in sched.nodes}
+    _, ucost = best_uniform(sched, SINGLE_POD)
+    for n in sched.nodes:
+        n.axis_map, n.unroll = saved[n.name]
+    assert rep.cost.total_s <= ucost.total_s * (1 + 1e-9)
+
+
+def test_outer_failure_restores_pre_failure_snapshot():
+    """``rate=1.0`` on ``dse.outer`` kills the composition level at
+    entry: the inner summaries survive untouched, the beam-phase error
+    boundary restores the best pre-failure snapshot, and the exit is
+    verifier-clean."""
+    reset_fresh_names()
+    g = build_lm_graph(get_config("xlstm-125m"), SHAPES["train_4k"])
+    with inject_faults(seed=0, rate=1.0, sites=("dse.outer",)) as inj:
+        sched, plan, rep = optimize(g, SINGLE_POD)
+    res = rep.parallelize
+    assert inj.fired("dse.outer")
+    assert res.dse_mode == "hierarchical"
+    assert all(not s.degraded for s in res.region_summaries)
+    assert any("beam phase failed" in d.error
+               for d in rep.degradations if d.stage == "dse")
+    assert rep.verify is not None and rep.verify.ok
+    assert rep.cost.total_s <= res.greedy_total_s * (1 + 1e-9)
+
+
 def test_budget_expiry_still_returns_clean_plan():
     """A one-microsecond budget forces the anytime path everywhere; the
     result must still be a complete, verifier-clean plan."""

@@ -1,0 +1,318 @@
+"""Hierarchy-equivalence properties of the two-level DSE
+(``repro.core.parallelize`` with ``dse_mode="hierarchical"``, the paper
+Section 4 decomposition: per-region inner beams composed by an
+inter-region outer beam).
+
+The flat whole-schedule beam is kept behind ``dse_mode="flat"`` as the
+differential-testing oracle.  Contracts:
+
+* **Hierarchical ≤ flat, everywhere** — on every registered model config
+  the two-level DSE's final QoR is at least as good as the flat beam's.
+  The dominance is structural (the outer level seeds with the same
+  uniform global family and the converged greedy state the flat beam
+  seeds with, and the final keep-best compares against both), so the
+  assertion is exact.
+* **Single-region schedules take the flat path bit-identically** — when
+  :func:`~repro.core.rewrite.dse_regions` leaves the schedule whole
+  (every PolyBench graph), ``dse_mode="hierarchical"`` is
+  indistinguishable from ``dse_mode="flat"``: same plan, same cost,
+  ``dse_mode == "flat"`` reported.
+* **Determinism** — two hierarchical runs on identical schedules commit
+  bit-identical plans and summaries (timings aside), and threaded
+  scoring (``sweep_workers``) changes nothing.
+* **Summary interface** — :class:`RegionSummary` round-trips exactly
+  through JSON, and the boundary-connection signature is stable under
+  renaming every node in the schedule (no names leak into the
+  inner→outer interface).
+* **Region-aware QoR floor** — ``best_uniform(regions=...)`` is never
+  worse than the whole-schedule floor.
+* **Anytime budget split** — an expired / near-expired deadline still
+  yields a complete assignment no worse than converged greedy, with
+  ``budget_expired`` reported.
+"""
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from benchmarks.common import POLYBENCH
+from repro.configs import SHAPES, get_config, list_archs
+from repro.core import (SINGLE_POD, best_uniform, build_lm_graph,
+                        construct_functional, fuse_tasks,
+                        lower_to_structural)
+from repro.core.balance import balance_paths
+from repro.core.ir import reset_fresh_names
+from repro.core.multi_producer import eliminate_multi_producers
+from repro.core.parallelize import RegionEntry, RegionSummary, parallelize
+from repro.core.rewrite import dse_regions
+
+ARCHS = list_archs()
+#: configs cheap enough for the fast lane (mirrors tests/test_rewrite.py)
+FAST_ARCHS = ("smollm-135m", "xlstm-125m", "stablelm-3b")
+
+
+def _arch_params(archs):
+    return [pytest.param(a, marks=() if a in FAST_ARCHS
+                         else (pytest.mark.slow,)) for a in archs]
+
+
+def _lowered_model(arch):
+    reset_fresh_names()
+    g = build_lm_graph(get_config(arch), SHAPES["train_4k"])
+    construct_functional(g)
+    fuse_tasks(g)
+    sched = lower_to_structural(g)
+    eliminate_multi_producers(sched)
+    balance_paths(sched)
+    return sched
+
+
+def _lowered_pb(name):
+    reset_fresh_names()
+    g = POLYBENCH[name]()
+    construct_functional(g)
+    fuse_tasks(g)
+    sched = lower_to_structural(g)
+    eliminate_multi_producers(sched)
+    balance_paths(sched)
+    return sched
+
+
+def _plan_snapshot(sched):
+    """Name-independent assignment snapshot (keyed by topo-list index)."""
+    return {i: (sorted(n.unroll.items()),
+                sorted((d, tuple(a)) for d, a in n.axis_map.items()))
+            for i, n in enumerate(sched.nodes) if n.unroll or n.axis_map}
+
+
+def _summary_sig(summ: RegionSummary):
+    """Everything in a summary except wall-clock timing."""
+    d = summ.to_dict()
+    d.pop("inner_s")
+    return d
+
+
+# --------------------------------------------------------------------------
+# Hierarchical QoR <= flat QoR on every registered config
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", _arch_params(ARCHS))
+def test_hier_qor_never_worse_than_flat(arch):
+    s_hier = _lowered_model(arch)
+    r_hier = parallelize(s_hier, SINGLE_POD, training=True)
+    s_flat = _lowered_model(arch)
+    r_flat = parallelize(s_flat, SINGLE_POD, training=True, dse_mode="flat")
+
+    assert r_flat.dse_mode == "flat" and not r_flat.region_summaries
+    assert r_hier.cost.total_s <= r_flat.cost.total_s, \
+        f"hierarchical {r_hier.cost.total_s} worse than flat " \
+        f"{r_flat.cost.total_s} on {arch}"
+    # Both modes keep the classic beam invariant vs. converged greedy.
+    assert r_hier.cost.total_s <= r_hier.greedy_total_s
+
+    if r_hier.dse_mode == "hierarchical":
+        assert r_hier.regions >= 2
+        assert len(r_hier.region_summaries) == r_hier.regions
+        assert r_hier.inner_dse_s > 0 and r_hier.outer_dse_s > 0
+        # Regions tile the schedule exactly once.
+        names = [n.name for n in s_hier.nodes]
+        covered = [nm for s in r_hier.region_summaries for nm in s.nodes]
+        assert sorted(covered) == sorted(names)
+        for summ in r_hier.region_summaries:
+            assert summ.entries, f"region {summ.index} has no entries"
+            # Best entry first; the converged-greedy entry always present.
+            best = min(e.key() for e in summ.entries)
+            assert summ.entries[0].key() == best
+            g = summ.entries[summ.greedy_index()]
+            assert g.origin == "greedy" and g.delta_s == 0.0
+            for e in summ.entries:
+                assert set(e.assignment) <= set(summ.nodes)
+                assert e.delta_s == e.total_s - g.total_s
+
+
+# --------------------------------------------------------------------------
+# Single-region schedules: hierarchical == flat, bit for bit
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(POLYBENCH))
+def test_single_region_bit_identical_to_flat(name):
+    s_hier = _lowered_pb(name)
+    assert len(dse_regions(s_hier)) == 1, \
+        f"PolyBench {name} unexpectedly partitioned"
+    r_hier = parallelize(s_hier, SINGLE_POD, training=False)
+    s_flat = _lowered_pb(name)
+    r_flat = parallelize(s_flat, SINGLE_POD, training=False,
+                         dse_mode="flat")
+
+    # The partitioner left the schedule whole, so the hierarchical mode
+    # must have taken the flat path — and report that honestly.
+    assert r_hier.dse_mode == "flat"
+    assert r_hier.regions == 1 and not r_hier.region_summaries
+    assert r_hier.inner_dse_s == 0.0 and r_hier.outer_dse_s == 0.0
+    assert _plan_snapshot(s_hier) == _plan_snapshot(s_flat)
+    assert r_hier.cost.total_s == r_flat.cost.total_s
+
+
+# --------------------------------------------------------------------------
+# Determinism: repeated runs and threaded scoring are bit-identical
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ("xlstm-125m", "stablelm-3b"))
+def test_hierarchical_runs_are_deterministic(arch):
+    s1 = _lowered_model(arch)
+    r1 = parallelize(s1, SINGLE_POD, training=True)
+    s2 = _lowered_model(arch)
+    r2 = parallelize(s2, SINGLE_POD, training=True)
+    assert _plan_snapshot(s1) == _plan_snapshot(s2)
+    assert r1.cost.total_s == r2.cost.total_s
+    assert ([_summary_sig(s) for s in r1.region_summaries]
+            == [_summary_sig(s) for s in r2.region_summaries])
+
+
+@pytest.mark.parametrize("arch", ("xlstm-125m",))
+def test_hierarchical_threaded_sweeps_match_serial(arch):
+    s_serial = _lowered_model(arch)
+    r_serial = parallelize(s_serial, SINGLE_POD, training=True)
+    s_thread = _lowered_model(arch)
+    r_thread = parallelize(s_thread, SINGLE_POD, training=True,
+                           sweep_workers=4)
+    assert _plan_snapshot(s_serial) == _plan_snapshot(s_thread)
+    assert r_serial.cost.total_s == r_thread.cost.total_s
+    assert ([_summary_sig(s) for s in r_serial.region_summaries]
+            == [_summary_sig(s) for s in r_thread.region_summaries])
+
+
+# --------------------------------------------------------------------------
+# RegionSummary: exact JSON round-trip
+# --------------------------------------------------------------------------
+
+def test_region_summary_json_round_trip():
+    sched = _lowered_model("xlstm-125m")
+    res = parallelize(sched, SINGLE_POD, training=True)
+    assert res.region_summaries
+    for summ in res.region_summaries:
+        wire = json.loads(json.dumps(summ.to_dict()))
+        back = RegionSummary.from_dict(wire)
+        assert back.to_dict() == summ.to_dict()
+        assert back.nodes == summ.nodes
+        assert back.boundary_sig == summ.boundary_sig
+        assert [e.key() for e in back.entries] \
+            == [e.key() for e in summ.entries]
+        assert back.entries[back.greedy_index()].assignment \
+            == summ.entries[summ.greedy_index()].assignment
+
+
+def test_region_entry_round_trip_preserves_assignment_types():
+    e = RegionEntry(
+        assignment={"n0": ({"d0": ("data",), "d1": ("model", "data")},
+                           {"d0": 4, "d1": 2})},
+        total_s=1.5, delta_s=-0.25, hbm_bytes=1024,
+        region_hbm_bytes=256, origin="search")
+    back = RegionEntry.from_dict(json.loads(json.dumps(e.to_dict())))
+    assert back == e
+    am, ur = back.assignment["n0"]
+    assert all(isinstance(axes, tuple) for axes in am.values())
+    assert all(isinstance(f, int) for f in ur.values())
+
+
+# --------------------------------------------------------------------------
+# Boundary signatures: stable under renaming every node
+# --------------------------------------------------------------------------
+
+def test_boundary_signature_stable_under_renaming():
+    """The partition walk and the boundary signature depend only on edge
+    structure, program order, and buffer geometry — never on node names.
+    Rename every node (inverting their lexicographic order) and both
+    must come out bit-identical."""
+    s_base = _lowered_model("xlstm-125m")
+    s_renamed = _lowered_model("xlstm-125m")
+    n = len(s_renamed.nodes)
+    for i, node in enumerate(s_renamed.nodes):
+        node.name = f"zz_{n - i:04d}"
+    s_renamed._topology = None  # force a topology rebuild on new names
+
+    regs_base = dse_regions(s_base)
+    regs_ren = dse_regions(s_renamed)
+    assert len(regs_base) == len(regs_ren) >= 2
+    pos_b = {nd.name: i for i, nd in enumerate(s_base.nodes)}
+    pos_r = {nd.name: i for i, nd in enumerate(s_renamed.nodes)}
+    for rb, rr in zip(regs_base, regs_ren):
+        # Same slice of the (renaming-stable) topological order...
+        assert sorted(pos_b[nm] for nm in rb.nodes) \
+            == sorted(pos_r[nm] for nm in rr.nodes)
+        assert len(rb.boundary) == len(rr.boundary)
+
+    r_base = parallelize(s_base, SINGLE_POD, training=True)
+    r_ren = parallelize(s_renamed, SINGLE_POD, training=True)
+    assert r_base.dse_mode == r_ren.dse_mode == "hierarchical"
+    # ...and bit-identical name-free boundary signatures per region.
+    assert [s.boundary_sig for s in r_base.region_summaries] \
+        == [s.boundary_sig for s in r_ren.region_summaries]
+    assert r_base.cost.total_s == r_ren.cost.total_s
+
+
+# --------------------------------------------------------------------------
+# Region-aware QoR floor
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", _arch_params(
+    ("xlstm-125m", "stablelm-3b", "jamba-v0.1-52b")))
+def test_region_aware_floor_never_worse_than_whole_schedule(arch):
+    s1 = _lowered_model(arch)
+    _, c_whole = best_uniform(s1, SINGLE_POD)
+    s2 = _lowered_model(arch)
+    regs = dse_regions(s2)
+    assert len(regs) >= 2
+    assign, c_region = best_uniform(s2, SINGLE_POD, regions=regs)
+    assert c_region.total_s <= c_whole.total_s * (1 + 1e-12)
+    # The returned assignment is still a whole-schedule family member.
+    assert isinstance(assign, dict)
+
+
+def test_region_aware_floor_single_region_is_identity():
+    s1 = _lowered_pb("atax")
+    _, c_plain = best_uniform(s1, SINGLE_POD, training=False)
+    s2 = _lowered_pb("atax")
+    _, c_regs = best_uniform(s2, SINGLE_POD, training=False,
+                             regions=dse_regions(s2))
+    assert c_regs.total_s == c_plain.total_s
+    assert _plan_snapshot(s1) == _plan_snapshot(s2)
+
+
+# --------------------------------------------------------------------------
+# Anytime budget split across the two levels
+# --------------------------------------------------------------------------
+
+def test_expired_deadline_still_returns_complete_assignment():
+    """A deadline that expired before the DSE started: the greedy pass
+    always completes (a full assignment must exist), both levels go
+    anytime immediately, and the result is never worse than greedy."""
+    sched = _lowered_model("xlstm-125m")
+    res = parallelize(sched, SINGLE_POD, training=True,
+                      deadline=time.perf_counter())
+    assert res.budget_expired
+    assert res.cost is not None
+    assert res.cost.total_s <= res.greedy_total_s
+    # Every region still produced at least its greedy entry.
+    if res.dse_mode == "hierarchical":
+        for summ in res.region_summaries:
+            assert summ.entries
+
+
+def test_near_expiry_deadline_is_anytime_not_an_error():
+    """A deadline mid-way through the inner level: whatever slice of the
+    search completes, the committed plan is best-so-far (<= greedy) and
+    the expiry is reported instead of raised."""
+    sched = _lowered_model("stablelm-3b")
+    res = parallelize(sched, SINGLE_POD, training=True,
+                      deadline=time.perf_counter() + 0.02)
+    assert res.cost is not None
+    assert res.cost.total_s <= res.greedy_total_s
+    snap = _plan_snapshot(sched)
+    assert snap  # a real assignment was committed in place
