@@ -12,9 +12,18 @@ proposal.  Methodology:
   ``training=True`` — the exact configuration of the paper-table runs.
 * PolyBench arms cover the small-graph regime where fixed overheads
   (graph construction, connection analysis) dominate.
+* Synthetic scale arms (``repro.core.generate``) extend the axis two
+  orders of magnitude past the model zoo: ``synth_1k`` always runs,
+  ``synth_5k`` runs in the full (non ``--fast``) suite, and
+  ``synth_10k`` is opt-in via ``--scale`` — it is the headroom arm, not
+  a per-PR gate.
 * Each arm reports end-to-end ``optimize()`` seconds plus the DSE
   statistics (nodes, proposals evaluated) so a regression can be
-  attributed to enumeration growth vs. per-proposal cost.
+  attributed to enumeration growth vs. per-proposal cost, plus
+  ``index_bytes`` — the peak footprint of the compile's indexing layers
+  (the fusion session's blocked closure rows + the schedule's cached
+  topology), which ``--compare`` gates so closure-row or cache growth
+  shows up as a number, not an OOM at 10k nodes.
 * Results are also written to ``BENCH_compile_time.json`` (path
   overridable via ``REPRO_BENCH_OUT_DIR``) so the trajectory is diffable
   across PRs.
@@ -63,11 +72,15 @@ from pathlib import Path
 
 from repro.configs import SHAPES, get_config
 from repro.core import SINGLE_POD, build_lm_graph, optimize
+from repro.core.generate import get_synth
 
 from .common import POLYBENCH
 
 MODEL_ARMS = ("smollm-135m", "jamba-v0.1-52b", "deepseek-v3-671b")
 PB_ARMS = ("2mm", "3mm", "atax", "correlation")
+#: synthetic scale-stress arms (repro.core.generate): 1k runs always,
+#: 5k in the full suite, 10k only with --scale.
+SYNTH_ARMS = ("synth_1k", "synth_5k", "synth_10k")
 
 
 def _time_optimize(graph_builder, training: bool) -> dict:
@@ -100,11 +113,15 @@ def _time_optimize(graph_builder, training: bool) -> dict:
         "inner_dse_s": rep.inner_dse_s,
         "outer_dse_s": rep.outer_dse_s,
         "regions": rep.regions,
+        # Peak indexing-layer footprint (fusion-session region indexes +
+        # cached schedule topology) — gated by --compare like wall_s.
+        "index_bytes": rep.index_bytes,
         "total_s": rep.cost.total_s,
     }
 
 
-def run(report, archs=None, fast: bool = False) -> dict:
+def run(report, archs=None, fast: bool = False,
+        scale: bool = False) -> dict:
     # --fast skips the slower model-zoo arms (matching the other suites);
     # the full run keeps deepseek-v3-671b, the arm the 10x target tracks.
     archs = archs or (MODEL_ARMS[:2] if fast else MODEL_ARMS)
@@ -131,6 +148,16 @@ def run(report, archs=None, fast: bool = False) -> dict:
                            f"|regions={r['regions']}"
                            f"|inner_ms={r['inner_dse_s'] * 1e3:.3f}"
                            f"|outer_ms={r['outer_dse_s'] * 1e3:.3f}")
+    synths = (SYNTH_ARMS[:1] if fast
+              else SYNTH_ARMS if scale else SYNTH_ARMS[:2])
+    for name in synths:
+        r = _time_optimize(lambda: get_synth(name), training=True)
+        results[f"synth/{name}"] = r
+        report.add(f"compile_time/{name}", us_per_call=r["wall_s"] * 1e6,
+                   derived=f"nodes={r['nodes']}|evaluated={r['evaluated']}"
+                           f"|pre_dse_ms={r['pre_dse_s'] * 1e3:.3f}"
+                           f"|regions={r['regions']}"
+                           f"|index_kb={r['index_bytes'] / 1024:.1f}")
 
     out_dir = Path(os.environ.get("REPRO_BENCH_OUT_DIR", "."))
     out = out_dir / "BENCH_compile_time.json"
@@ -158,6 +185,12 @@ FUSE_MIN_DELTA_S = 0.02
 #: guard keeps sub-millisecond jitter from gating while catching any
 #: future check family that makes verification a per-compile tax.
 VERIFY_MIN_DELTA_S = 0.02
+
+#: absolute growth below this many bytes never gates the index_bytes
+#: check (the small model/PolyBench arms hold a few KB of index; a 2x
+#: ratio there is noise-of-representation, not a leak).  64 KiB of real
+#: growth on an unchanged arm is a closure-row / cache regression.
+INDEX_BYTES_MIN_DELTA = 64 * 1024
 
 
 def compare(results: dict, baseline: dict, threshold: float,
@@ -247,6 +280,22 @@ def compare(results: dict, baseline: dict, threshold: float,
                     f"is {ver_ratio:.2f}x the baseline "
                     f"{old['verify_s']*1e3:.2f}ms (threshold "
                     f"{threshold:.2f}x)")
+        # Peak index memory gates like wall time: the blocked closure
+        # rows and topology caches must stay O(edges), and a
+        # representation regression (say, rows going dense again) shows
+        # up here long before it shows up as an OOM.
+        if "index_bytes" in new and "index_bytes" in old:
+            mem_ratio = (new["index_bytes"] / old["index_bytes"]
+                         if old["index_bytes"] else float("inf"))
+            if (mem_ratio > threshold
+                    and new["index_bytes"] - old["index_bytes"]
+                    > INDEX_BYTES_MIN_DELTA):
+                failures.append(
+                    f"{arm}: peak index memory "
+                    f"{new['index_bytes'] / 1024:.1f}KiB is "
+                    f"{mem_ratio:.2f}x the baseline "
+                    f"{old['index_bytes'] / 1024:.1f}KiB (threshold "
+                    f"{threshold:.2f}x)")
         if new["total_s"] > old["total_s"] * (1 + qor_tolerance):
             failures.append(
                 f"{arm}: QoR regressed — estimated total_s "
@@ -268,6 +317,8 @@ def main(argv: list[str] | None = None) -> int:
         description="optimize() compile-time benchmark / regression gate")
     ap.add_argument("--fast", action="store_true",
                     help="skip the slower model-zoo arms")
+    ap.add_argument("--scale", action="store_true",
+                    help="include the synth_10k headroom arm")
     ap.add_argument("--compare", metavar="BASELINE_JSON", default=None,
                     help="diff against a committed BENCH_compile_time.json "
                          "and exit nonzero on regression")
@@ -299,7 +350,7 @@ def main(argv: list[str] | None = None) -> int:
     from .run import Report
     report = Report()
     print("name,us_per_call,derived")
-    results = run(report, fast=args.fast)
+    results = run(report, fast=args.fast, scale=args.scale)
     if baseline is None:
         return 0
     failures = compare(results, baseline, args.threshold, args.min_delta_s,

@@ -4,6 +4,7 @@ from __future__ import annotations
 import importlib
 
 from .base import SHAPES, ArchConfig, ShapeSpec, shape_applicable
+from ..core.generate import SYNTH_CONFIGS, get_synth, list_synths
 
 _ARCH_MODULES = {
     "jamba-v0.1-52b": "jamba_v0_1_52b",
@@ -31,4 +32,7 @@ def get_config(arch: str, smoke: bool = False) -> ArchConfig:
 
 
 __all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "shape_applicable",
-           "get_config", "list_archs"]
+           "get_config", "list_archs",
+           # Synthetic scale-stress graphs ride the same registry so
+           # benches and tests resolve them next to the real archs.
+           "SYNTH_CONFIGS", "get_synth", "list_synths"]

@@ -7,6 +7,7 @@ from .estimator import (MULTI_POD, SINGLE_POD, MeshSpec, estimate,
 from .faults import (FaultInjector, InjectedFault, active_injector,
                      fault_point, inject_faults)
 from .fusion import fuse_tasks
+from .generate import SYNTH_CONFIGS, SynthSpec, build_synth_graph, get_synth
 from .graph import build_lm_graph
 from .incremental import IncrementalEstimator
 from .ir import (AccessMap, Buffer, Graph, GraphTopology, MemoryEffect, Node,
@@ -18,7 +19,8 @@ from .parallelize import (RegionEntry, RegionSummary, best_uniform,
                           parallelize)
 from .plan import ShardingPlan, build_plan, project_rules, replicated_plan
 from .rewrite import (GraphRewriteSession, RegionSpec, RewriteError,
-                      ScheduleRewriteSession, dse_regions)
+                      ScheduleRewriteSession, default_region_bounds,
+                      dse_regions, region_index_bytes)
 from .verify import VerifyError, VerifyIssue, VerifyReport, verify
 
 __all__ = [
@@ -35,6 +37,8 @@ __all__ = [
     "build_lm_graph",
     "GraphRewriteSession", "ScheduleRewriteSession", "RewriteError",
     "RegionSpec", "dse_regions", "RegionSummary", "RegionEntry",
+    "default_region_bounds", "region_index_bytes",
+    "SYNTH_CONFIGS", "SynthSpec", "build_synth_graph", "get_synth",
     "verify", "VerifyReport", "VerifyIssue", "VerifyError",
     "inject_faults", "fault_point", "active_injector", "FaultInjector",
     "InjectedFault",

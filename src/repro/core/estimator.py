@@ -86,6 +86,42 @@ def buffer_shard_factor(buf: Buffer, node: Node) -> int:
     return max(f, 1)
 
 
+def tree_sum(values) -> float:
+    """Sum floats in a fixed perfect-binary-tree order.
+
+    The reduction shape depends only on ``len(values)`` (leaves padded
+    with ``0.0`` to the next power of two, then summed pairwise level by
+    level), never on the values.  Two properties make this the summation
+    contract of the whole QoR layer:
+
+    * a *point update* recomputes only the leaf-to-root path and lands on
+      bit-exactly the same root a from-scratch reduction would produce —
+      which is what lets :class:`~repro.core.incremental.IncrementalEstimator`
+      maintain ``total_s`` / ``hbm_bytes_per_device`` as O(log n)
+      segment trees while staying bit-identical to this batch path
+      (sequential left-to-right ``sum()`` has no such property: a
+      running total diverges from a re-sum after the first non-exact
+      add);
+    * the tree depth is O(log n), so the roundoff of a 10k-node total is
+      bounded by ~14 adds instead of ~10k.
+
+    Every totals consumer (batch ``estimate()``, the incremental engine,
+    ``score()``) must reduce through this same shape — mixing orders
+    breaks the engine-vs-batch bitwise equivalence pinned by
+    ``tests/test_incremental.py``.
+    """
+    level = list(values)
+    if not level:
+        return 0.0
+    size = 1
+    while size < len(level):
+        size *= 2
+    level.extend([0.0] * (size - len(level)))
+    while len(level) > 1:
+        level = [level[i] + level[i + 1] for i in range(0, len(level), 2)]
+    return level[0]
+
+
 @dataclass
 class NodeCost:
     compute_s: float
@@ -113,7 +149,7 @@ class ScheduleCost:
 
     @property
     def total_s(self) -> float:
-        return sum(c.latency_s for c in self.nodes.values())
+        return tree_sum([c.latency_s for c in self.nodes.values()])
 
     @property
     def critical_s(self) -> float:
@@ -191,8 +227,13 @@ class EstimateContext:
     proposals per node, so the O(buffers·nodes²) edge scan is hoisted."""
 
     def __init__(self, sched: Schedule):
-        self.edges = sched.edges()
-        self.consumers = {b: sched.consumers_of(b) for b in sched.buffers}
+        # One topology() call for the whole build: consumers_of() would
+        # re-validate the topology cache (an O(nodes) signature walk) per
+        # buffer, turning this constructor O(buffers·nodes) at 1k+ nodes.
+        topo = sched.topology()
+        self.edges = list(topo.edges)
+        self.consumers = {b: list(topo.consumers.get(b, ()))
+                          for b in sched.buffers}
         self.weight_buffers = [b for b, buf in sched.buffers.items()
                                if buf.is_weight]
         self.by_name = {n.name: n for n in sched.nodes}
@@ -269,7 +310,7 @@ def estimate(sched: Schedule, mesh: MeshSpec, training: bool = True,
     ctx = ctx or EstimateContext(sched)
     reshard = _reshard_bytes(sched, ctx)
     sync = _weight_sync_bytes(sched, mesh, training, ctx)
-    hbm = 0.0
+    hbm: list[float] = []
     for node in sched.nodes:
         pf = node_parallel_factor(node)
         flops = node.intensity()
@@ -281,10 +322,12 @@ def estimate(sched: Schedule, mesh: MeshSpec, training: bool = True,
             memory_s=nbytes / HBM_BW,
             collective_s=coll / ICI_BW,
         )
-        hbm += nbytes
+        hbm.append(nbytes)
     cost.reshard_bytes = sum(reshard.values())
     cost.sync_bytes = sum(sync.values())
-    cost.hbm_bytes_per_device = int(hbm)
+    # Same tree shape as the incremental engine's nbytes segment tree —
+    # see tree_sum's contract.
+    cost.hbm_bytes_per_device = int(tree_sum(hbm))
     return cost
 
 

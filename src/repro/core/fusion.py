@@ -116,6 +116,11 @@ def adjacent(a: Op, b: Op) -> bool:
 class FusionStats:
     pattern_fusions: int = 0
     balance_fusions: int = 0
+    #: peak bytes held by the rewrite session's region indexes (closure
+    #: rows, rank maps, consumer buckets) over the whole fusion run —
+    #: sampled at every structural commit point, reported per arm by
+    #: ``bench_compile_time`` and gated by its memory comparison.
+    index_peak_bytes: int = 0
     log: list[str] = field(default_factory=list)
 
 
@@ -293,4 +298,5 @@ def fuse_tasks(graph: Graph, patterns: list[FusionPattern] | None = None,
                 _pattern_phase(op, patterns, stats, rs)
                 _balance_phase(op, stats, rs, max_tasks)
         rs.canonicalize(simplify_hierarchy)
+    stats.index_peak_bytes = rs.index_peak_bytes
     return stats

@@ -27,11 +27,18 @@ structure:
 Re-scoring a proposal for one node then touches only that node's local
 terms plus its incident edges — O(deg) instead of O(nodes × ops) — via a
 ``propose() / commit() / rollback()`` API.  Aggregates (``total_s``,
-``hbm_bytes_per_device``) are re-summed over the per-node caches in
-schedule order so every float add happens in exactly the order the batch
-path uses: the engine is **bit-identical** to ``estimate()``, not merely
-approximately equal (per-edge and per-sync terms are integers, so their
-delta maintenance is exact; float terms are never delta-maintained).
+``hbm_bytes_per_device``) are maintained as **segment trees** over the
+per-node caches, reducing in the fixed perfect-binary-tree order of
+:func:`~repro.core.estimator.tree_sum` — the batch path sums through the
+same shape, so a leaf-to-root point update lands on bit-exactly the
+total a from-scratch batch walk would produce.  That makes aggregate
+reads O(1) and ``score()`` O(deg · log n) instead of O(n) per proposal
+(the former sequential re-sum was the DSE's hidden quadratic term past
+~1k nodes), while keeping the engine **bit-identical** to
+``estimate()``, not merely approximately equal (per-edge and per-sync
+terms are integers, so their delta maintenance is exact; float terms
+are only ever re-reduced through the shared tree shape, never
+delta-adjusted).
 
 Three access patterns sit on top of the cached state:
 
@@ -100,6 +107,66 @@ def _out_shard(dims: tuple[str, ...] | None, unroll: dict[str, int]) -> int:
     for d in dims:
         f *= unroll.get(d, 1)
     return max(f, 1)
+
+
+class _SumTree:
+    """Segment tree over floats whose root is **bit-identical** to
+    :func:`~repro.core.estimator.tree_sum` of the leaf values.
+
+    Leaves are padded with ``0.0`` to the next power of two and every
+    internal node is the sum of its two children — exactly the reduction
+    shape ``tree_sum`` walks — so a point update (:meth:`set`) replays
+    only the log-depth path of additions from that leaf to the root and
+    lands on the same bits a from-scratch re-reduction would.
+    :meth:`root_with` evaluates the root under a sparse leaf override
+    **without mutating anything** (copy-on-write level walk), which is
+    what makes ``score()`` O(deg · log n).
+    """
+
+    __slots__ = ("size", "tree")
+
+    def __init__(self, values: list[float]):
+        size = 1
+        while size < max(len(values), 1):
+            size *= 2
+        self.size = size
+        t = [0.0] * (2 * size)
+        t[size:size + len(values)] = [float(v) for v in values]
+        for i in range(size - 1, 0, -1):
+            t[i] = t[2 * i] + t[2 * i + 1]
+        self.tree = t
+
+    def set(self, i: int, v: float) -> None:
+        j = self.size + i
+        t = self.tree
+        t[j] = v
+        j >>= 1
+        while j:
+            t[j] = t[2 * j] + t[2 * j + 1]
+            j >>= 1
+
+    @property
+    def root(self) -> float:
+        return self.tree[1]
+
+    def root_with(self, overrides: dict[int, float]) -> float:
+        """Root value if leaves ``i`` held ``overrides[i]`` — pure read."""
+        if not overrides:
+            return self.tree[1]
+        t = self.tree
+        level = {self.size + i: float(v) for i, v in overrides.items()}
+        while 1 not in level:
+            nxt: dict[int, float] = {}
+            for j in level:
+                p = j >> 1
+                if p in nxt:
+                    continue
+                left = p << 1
+                right = left | 1
+                nxt[p] = (level.get(left, t[left])
+                          + level.get(right, t[right]))
+            level = nxt
+        return level[1]
 
 
 @dataclass
@@ -352,6 +419,10 @@ class IncrementalEstimator:
             self._reshard[edge.dst] += v
         for i in range(len(self._nodes)):
             self._lat[i] = self._latency(i)
+        # Rebuild the aggregate trees wholesale; point updates keep them
+        # in sync from here on.
+        self._lat_tree = _SumTree(self._lat)
+        self._nbytes_tree = _SumTree(self._nbytes)
 
     def _update_node(self, i: int, record: list | None) -> None:
         """Refresh node ``i``'s local terms and incident edges; ``record``
@@ -360,6 +431,7 @@ class IncrementalEstimator:
             record.append(("local", i, self._comp[i], self._mem[i],
                            self._nbytes[i], self._red[i], self._sync[i]))
         self._node_local(i)
+        self._nbytes_tree.set(i, self._nbytes[i])
         touched = {i}
         for e in self._edges_of[i]:
             edge = self._edges[e]
@@ -375,6 +447,7 @@ class IncrementalEstimator:
             if record is not None:
                 record.append(("lat", j, self._lat[j]))
             self._lat[j] = self._latency(j)
+            self._lat_tree.set(j, self._lat[j])
 
     # -- mutation API --------------------------------------------------------
 
@@ -411,15 +484,22 @@ class IncrementalEstimator:
                 self._nodes[i].unroll = unroll
                 self._nodes[i].axis_map = axis_map
             elif kind == "local":
-                (_, i, self._comp[i], self._mem[i], self._nbytes[i],
-                 self._red[i], self._sync[i]) = entry
+                _, i, comp, mem, nbytes, red, sync = entry
+                self._comp[i] = comp
+                self._mem[i] = mem
+                self._nbytes[i] = nbytes
+                self._nbytes_tree.set(i, nbytes)
+                self._red[i] = red
+                self._sync[i] = sync
             elif kind == "edge":
                 _, e, old = entry
                 new = self._contrib[e]
                 self._contrib[e] = old
                 self._reshard[self._edges[e].dst] += old - new
             else:  # "lat"
-                _, i, self._lat[i] = entry
+                _, i, lat = entry
+                self._lat[i] = lat
+                self._lat_tree.set(i, lat)
         self._undo = None
 
     def apply(self, name: str, axis_map: dict[str, tuple[str, ...]],
@@ -472,10 +552,12 @@ class IncrementalEstimator:
             coll = (resh_ov.get(j, self._reshard[j]) + s + r) / ICI_BW
             lat_ov[j] = max(c, m, coll) + FIXED_NODE_OVERHEAD_S
 
-        total = sum(lat_ov.get(j, v) for j, v in enumerate(self._lat))
-        hbm = 0.0
-        for j, v in enumerate(self._nbytes):
-            hbm += nbytes if j == i else v
+        # O(deg · log n): evaluate the aggregate trees under the sparse
+        # leaf overrides instead of re-summing every node.  The override
+        # key sets equal the leaves propose() would rewrite, so the
+        # results stay bit-identical to propose → read → rollback.
+        total = self._lat_tree.root_with(lat_ov)
+        hbm = self._nbytes_tree.root_with({i: nbytes})
         pf = 1
         for v in unroll.values():
             pf *= v
@@ -509,7 +591,7 @@ class IncrementalEstimator:
 
     @property
     def total_s(self) -> float:
-        return sum(self._lat)
+        return self._lat_tree.root
 
     @property
     def critical_s(self) -> float:
@@ -517,10 +599,7 @@ class IncrementalEstimator:
 
     @property
     def hbm_bytes_per_device(self) -> int:
-        hbm = 0.0
-        for v in self._nbytes:
-            hbm += v
-        return int(hbm)
+        return int(self._nbytes_tree.root)
 
     def node_compute_s(self, name: str) -> float:
         return self._comp[self._idx[name]]

@@ -678,6 +678,28 @@ class ScheduleTopology:
     _access: dict[tuple[str, str], Optional[AccessMap]]
     #: structure fingerprint this topology was built against
     signature: tuple
+    #: lazily memoized topo order / longest-path depth map.  Safe to cache
+    #: here: the topology object itself is rebuilt (via the signature check
+    #: in ``Schedule.topology``) whenever the structure changes, so these
+    #: can never go stale independently of the object that owns them.
+    _order_memo: Optional[list[Node]] = field(
+        default=None, repr=False, compare=False)
+    _depth_memo: Optional[dict[str, int]] = field(
+        default=None, repr=False, compare=False)
+
+    def topo_order(self, nodes: list[Node], name: str) -> list[Node]:
+        """Memoized ``topo_order_over`` — the walk runs once per topology
+        build, then every caller gets a fresh list copy."""
+        if self._order_memo is None:
+            self._order_memo = topo_order_over(nodes, self.edges, name)
+        return list(self._order_memo)
+
+    def depth_of(self, nodes: list[Node], name: str) -> dict[str, int]:
+        """Memoized ``depth_map_over`` — one relaxation pass per topology
+        build, fresh dict copies out."""
+        if self._depth_memo is None:
+            self._depth_memo = depth_map_over(nodes, self.edges, name)
+        return dict(self._depth_memo)
 
     def access_for(self, node: Node, value: str) -> Optional[AccessMap]:
         """Cached ``node.access_for(value)``."""
@@ -740,6 +762,32 @@ class ScheduleTopology:
             _access=access, signature=sched.structure_signature())
 
 
+def topology_index_bytes(topo: ScheduleTopology) -> int:
+    """Logical footprint of a :class:`ScheduleTopology`'s caches, in bytes.
+
+    Counts 8 bytes (one machine word) per stored reference/entry across
+    the edge list, the per-buffer producer/consumer lists, the per-axis
+    owner tables, the access-map memo and the order/depth memos.  This is
+    a *representation-comparable* measure (like ``region_index_bytes`` in
+    ``core.rewrite``), not an exact ``sys.getsizeof`` sum — it is what the
+    ``bench_compile_time`` memory gate tracks so a regression in cache
+    growth shows up as a number, independent of CPython object overhead.
+    """
+    total = 8 * 3 * len(topo.edges)
+    for m in (topo.producers, topo.consumers):
+        total += sum(8 * (1 + len(v)) for v in m.values())
+    for per_axis in topo.axis_owner_dims.values():
+        total += sum(8 * 2 * len(pairs) for pairs in per_axis)
+    total += sum(8 * (1 + len(v)) for v in topo.axis_dims.values())
+    total += sum(8 * (1 + len(v)) for v in topo.buffers_of_dim.values())
+    total += 8 * 2 * len(topo._access)
+    if topo._order_memo is not None:
+        total += 8 * len(topo._order_memo)
+    if topo._depth_memo is not None:
+        total += 8 * 2 * len(topo._depth_memo)
+    return total
+
+
 @dataclass
 class Schedule:
     """Structural dataflow schedule: isolated region of nodes + buffers."""
@@ -758,12 +806,30 @@ class Schedule:
     # Cached ScheduleTopology (see topology()); never compared/printed.
     _topology: Optional[ScheduleTopology] = field(
         default=None, repr=False, compare=False)
+    # Lazy name→Node map behind node(); validated by list length (nodes
+    # are only ever inserted, never replaced in place) and by re-checking
+    # the hit's name (in-place renames).  Never compared/printed.
+    _node_cache: Optional[dict] = field(
+        default=None, repr=False, compare=False)
+    _node_cache_len: int = field(default=-1, repr=False, compare=False)
 
     def node(self, name: str) -> Node:
-        for n in self.nodes:
-            if n.name == name:
-                return n
-        raise KeyError(name)
+        """Look up a node by name — O(1) amortized via a lazily rebuilt
+        dict (the former linear scan was O(n²) aggregate at 1k+ nodes)."""
+        cache = self._node_cache
+        if cache is None or self._node_cache_len != len(self.nodes):
+            cache = {n.name: n for n in self.nodes}
+            self._node_cache = cache
+            self._node_cache_len = len(self.nodes)
+        hit = cache.get(name)
+        if hit is None or hit.name != name:
+            cache = {n.name: n for n in self.nodes}
+            self._node_cache = cache
+            self._node_cache_len = len(self.nodes)
+            hit = cache.get(name)
+            if hit is None:
+                raise KeyError(name)
+        return hit
 
     # -- shared topology cache ------------------------------------------------
     def structure_signature(self) -> tuple:
@@ -825,12 +891,19 @@ class Schedule:
 
     def topo_order(self) -> list[Node]:
         """Topological order over buffer edges (stable; raises on cycles
-        between distinct nodes, ignoring self-loops from RW args)."""
-        return topo_order_over(self.nodes, self.edges(), self.name)
+        between distinct nodes, ignoring self-loops from RW args).
+
+        Memoized on the cached topology: repeated calls between structural
+        mutations cost one list copy, not a fresh Kahn walk — the balance
+        and stage-assignment passes call this per candidate at scale."""
+        return self.topology().topo_order(self.nodes, self.name)
 
     def depth_of(self) -> dict[str, int]:
-        """Longest-path depth per node (for data-path balancing)."""
-        return depth_map_over(self.nodes, self.edges(), self.name)
+        """Longest-path depth per node (for data-path balancing).
+
+        Memoized on the cached topology (same contract as
+        :meth:`topo_order`)."""
+        return self.topology().depth_of(self.nodes, self.name)
 
     # -- serialisation --------------------------------------------------------
     def to_dict(self) -> dict:

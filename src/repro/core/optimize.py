@@ -37,7 +37,7 @@ from .construct import construct_functional
 from .estimator import MeshSpec, ScheduleCost, estimate
 from .faults import active_injector
 from .fusion import FusionStats, fuse_tasks
-from .ir import Graph, Schedule
+from .ir import Graph, Schedule, topology_index_bytes
 from .lower import fallback_schedule, lower_to_structural
 from .multi_producer import MultiProducerStats, eliminate_multi_producers
 from .parallelize import ParallelizeResult, best_uniform, parallelize
@@ -107,6 +107,13 @@ class OptimizeReport:
     inner_dse_s: float = 0.0
     outer_dse_s: float = 0.0
     regions: int = 1
+    #: peak bytes held by the compile's indexing layers: the fusion
+    #: session's region indexes (``FusionStats.index_peak_bytes``) plus
+    #: the final schedule's cached :class:`~repro.core.ir.ScheduleTopology`
+    #: (``topology_index_bytes``).  Representation-comparable, not
+    #: ``sys.getsizeof``-exact; benchmarks/bench_compile_time reports it
+    #: per arm and its ``--compare`` mode gates regressions.
+    index_bytes: int = 0
     #: every degradation-ladder rung that fired, in pipeline order —
     #: empty on a clean compile.
     degradations: list[Degradation] = field(default_factory=list)
@@ -434,4 +441,12 @@ def optimize(graph: Graph, mesh: MeshSpec, *,
     report.compile_time_s = time.perf_counter() - t0
     report.meta = {"nodes": len(sched.nodes),
                    "buffers": len(sched.buffers)}
+    # Peak indexing-layer footprint: the fusion session's region indexes
+    # plus the schedule's cached topology (edges, owner tables, memos).
+    try:
+        report.index_bytes = (
+            (report.fusion.index_peak_bytes if report.fusion else 0)
+            + topology_index_bytes(sched.topology()))
+    except Exception:
+        report.index_bytes = 0
     return sched, plan, report

@@ -94,7 +94,7 @@ from dataclasses import dataclass, field
 from fractions import Fraction
 from typing import Optional
 
-from .estimator import MeshSpec, ScheduleCost, estimate
+from .estimator import EstimateContext, MeshSpec, ScheduleCost, estimate
 from .faults import corrupt_value, fault_point
 from .incremental import IncrementalEstimator, Snapshot
 from .ir import Node, Schedule
@@ -226,11 +226,20 @@ def _divisible(constraint: Fraction, factor: int) -> bool:
 
 
 def _shardable_dims(node: Node) -> dict[str, int]:
+    # Memoized on the node: the body (and so loop_dims / no_shard) is
+    # fixed once the node exists, and the DSE asks for this on every
+    # proposal — recomputing it was ~15% of a 5k-node compile.  Callers
+    # treat the returned dict as read-only.
+    cached = node.__dict__.get("_shardable_memo")
+    if cached is not None:
+        return cached
     dims = node.loop_dims()
     blocked: set[str] = set()
     for o in node.body:
         blocked.update(o.attrs.get("no_shard", ()))
-    return {d: s for d, s in dims.items() if s > 1 and d not in blocked}
+    cached = {d: s for d, s in dims.items() if s > 1 and d not in blocked}
+    node.__dict__["_shardable_memo"] = cached
+    return cached
 
 
 def _proposals(node: Node, mesh: MeshSpec, pf_cap: int
@@ -312,12 +321,34 @@ def _uniform_proposal(node: Node, assign: dict[str, tuple[str, ...]],
     return prop
 
 
+#: Above this many schedule nodes the uniform family enumerates only the
+#: most-covered dims (below it, every dim — bit-identical to the
+#: historical behaviour on every real config, all ≤ 43 nodes).
+_UNIFORM_SCALE_N = 256
+
+#: Dim cap for the scaled regime.  The family is quadratic in the dim
+#: count, and synthetic 5k-node graphs carry a dozen distinct hidden-dim
+#: names whose members score near-identically: a dim shardable in 2% of
+#: nodes cannot move a 5k-node total.  Coverage-ranked, ties broken by
+#: name for determinism.
+_UNIFORM_DIM_CAP = 6
+
+
 def _uniform_assignments(sched: Schedule) -> list[dict[str, tuple[str, ...]]]:
     """The uniform-assignment family: every (data-axis dim, model-axis
     dim) pairing over the schedule's shardable dims — one coordinated
-    layout applied to every node at once."""
-    all_dims = sorted({d for n in sched.nodes
-                       for d in _shardable_dims(n)})
+    layout applied to every node at once.  Past ``_UNIFORM_SCALE_N``
+    nodes, only the ``_UNIFORM_DIM_CAP`` dims shardable in the most
+    nodes enumerate (scale-aware bound; see the constants above)."""
+    cover: dict[str, int] = {}
+    for n in sched.nodes:
+        for d in _shardable_dims(n):
+            cover[d] = cover.get(d, 0) + 1
+    all_dims = sorted(cover)
+    if (len(sched.nodes) > _UNIFORM_SCALE_N
+            and len(all_dims) > _UNIFORM_DIM_CAP):
+        all_dims = sorted(sorted(
+            cover, key=lambda d: (-cover[d], d))[:_UNIFORM_DIM_CAP])
     cands = []
     for d1 in all_dims + [None]:
         for d2 in all_dims + [None]:
@@ -358,12 +389,18 @@ def best_uniform(sched: Schedule, mesh: MeshSpec, *,
     max_pf = max_parallel_factor or mesh.chips
     pf = parallel_factors(sched, max_pf, ia)
     uniforms = [{}] + _uniform_assignments(sched)
+    # One topology walk for the whole scan: every family member (and the
+    # per-region retries below) only rewrites axis_map/unroll, so the
+    # edge/consumer/weight structure behind EstimateContext never moves.
+    # Rebuilding it per estimate() call was O(members × edges) — the
+    # dominant cost of the floor at 1k+ nodes.
+    ctx = EstimateContext(sched)
     best: tuple[ScheduleCost, dict, dict] | None = None
     scored: list[tuple[float, int]] = []
     for ui, assign in enumerate(uniforms):
         for n in sched.nodes:
             _apply(n, _uniform_proposal(n, assign, pf[n.name], mesh), mesh)
-        cost = estimate(sched, mesh, training=training)
+        cost = estimate(sched, mesh, training=training, ctx=ctx)
         scored.append((cost.total_s, ui))
         if best is None or cost.total_s < best[0].total_s:
             best = (cost, assign,
@@ -381,6 +418,17 @@ def best_uniform(sched: Schedule, mesh: MeshSpec, *,
         retry = [uniforms[ui] for _s, ui in scored[:3]]
         if uniforms[0] not in retry:
             retry.append(uniforms[0])
+        # Each retry costs a whole-schedule estimate, so at scale the
+        # regions × retries product must be budgeted or the floor rung
+        # takes minutes at 10k nodes.  Refine the largest regions first
+        # (most cost mass); every real config's partition fits inside
+        # the budget, so this is a no-op below ~64 regions.
+        budget = 256
+        if len(regions) * len(retry) > budget:
+            regions = sorted(regions, key=lambda s: (-len(s.nodes),
+                                                     s.index))
+            regions = sorted(regions[:max(1, budget // len(retry))],
+                             key=lambda s: s.index)
         node_by_name = {n.name: n for n in sched.nodes}
         for spec in regions:
             rnodes = [node_by_name[nm] for nm in spec.nodes
@@ -393,7 +441,7 @@ def best_uniform(sched: Schedule, mesh: MeshSpec, *,
                 for n in rnodes:
                     _apply(n, _uniform_proposal(n, rassign, pf[n.name],
                                                 mesh), mesh)
-                c = estimate(sched, mesh, training=training)
+                c = estimate(sched, mesh, training=training, ctx=ctx)
                 if c.total_s < cost.total_s:
                     cost = c
                     keep = {n.name: (dict(n.axis_map), dict(n.unroll))
@@ -825,8 +873,19 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
         changed: list[str] = []
         for cls in classes:
             if pool is not None and len(cls) > 1:
-                picks = list(pool.map(
-                    lambda n: rank_node(n, all_names, 1), cls))
+                # Data-sized batching: hand each worker a contiguous
+                # slice (~2 slices per worker for tail balance) instead
+                # of one node per pool task.  At 1k+ nodes a color class
+                # can hold hundreds of nodes, and per-task dispatch
+                # overhead was beating the scoring work itself.  Slicing
+                # is order-preserving, so the zip below and the serial
+                # reference stay byte-identical.
+                chunk = max(1, -(-len(cls) // (sweep_workers * 2)))
+                batches = [cls[b:b + chunk]
+                           for b in range(0, len(cls), chunk)]
+                picks = [p for sub in pool.map(
+                    lambda ns: [rank_node(n, all_names, 1) for n in ns],
+                    batches) for p in sub]
             else:
                 picks = [rank_node(n, all_names, 1) for n in cls]
             for node, (top, evaluated, rejected) in zip(cls, picks):

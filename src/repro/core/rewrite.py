@@ -51,6 +51,7 @@ schedule and topology bit-exactly.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 from typing import Callable, Iterable, Optional, Sequence
 
@@ -144,6 +145,107 @@ def _bits(mask: int):
         mask ^= low
 
 
+# -- blocked closure rows ---------------------------------------------------
+#
+# A closure row is a sparse bitset stored as ``dict[block -> word]``: bit
+# position ``p`` lives in 64-bit word ``p >> 6`` at offset ``p & 63``, and
+# zero words are never stored — the dict keys *are* the per-block occupancy
+# index.  Arbitrary-precision int rows pay for every bit below the highest
+# set one (a task late in a 10k-task region costs ~1.2 KB per row even when
+# it reaches three neighbours); blocked rows pay 8 bytes per *occupied*
+# block, so band-structured closures (pipelines, MoE fan-outs) stay linear
+# in the edges that exist.  Rows are immutable by convention — every helper
+# returns a fresh dict — which keeps the exact-rollback contract of the int
+# representation: undo logs store the previous row object, nothing aliases.
+
+def _row_bits(row: dict[int, int]):
+    """Yield the set bit positions of ``row`` (ascending)."""
+    for k in sorted(row):
+        w = row[k]
+        base = k << 6
+        while w:
+            low = w & -w
+            yield base + low.bit_length() - 1
+            w ^= low
+
+
+def _row_has(row: dict[int, int], p: int) -> bool:
+    return bool(row.get(p >> 6, 0) >> (p & 63) & 1)
+
+
+def _row_set(row: dict[int, int], p: int) -> dict[int, int]:
+    """``row | {p}`` as a fresh row."""
+    new = dict(row)
+    new[p >> 6] = new.get(p >> 6, 0) | 1 << (p & 63)
+    return new
+
+
+def _row_or(a: dict[int, int], b: dict[int, int]) -> dict[int, int]:
+    new = dict(a)
+    for k, w in b.items():
+        new[k] = new.get(k, 0) | w
+    return new
+
+
+def _row_fold(row: dict[int, int], p1: int, p2: int,
+              add: dict[int, int]) -> dict[int, int]:
+    """``(row & ~{p1, p2}) | add`` in one allocation — the per-row fuse
+    update (kill the fused pair's bits, add the merged task's)."""
+    new = dict(row)
+    for p in (p1, p2):
+        k = p >> 6
+        w = new.get(k)
+        if w is not None:
+            w &= ~(1 << (p & 63))
+            if w:
+                new[k] = w
+            else:
+                del new[k]
+    for k, w in add.items():
+        new[k] = new.get(k, 0) | w
+    return new
+
+
+_ROW_EMPTY: dict[int, int] = {}
+
+
+def _row_intersects(a: dict[int, int], b: dict[int, int]) -> bool:
+    if len(b) < len(a):
+        a, b = b, a
+    return any(w & b.get(k, 0) for k, w in a.items())
+
+
+def _row_count(row: dict[int, int]) -> int:
+    return sum(w.bit_count() for w in row.values())
+
+
+def _row_bytes(row: dict[int, int]) -> int:
+    """Logical footprint: 8 bytes per occupied 64-bit block."""
+    return 8 * len(row)
+
+
+def _row_to_int(row: dict[int, int]) -> int:
+    """Flatten a blocked row to the equivalent bitmask int (the reference
+    representation the property tests compare against)."""
+    mask = 0
+    for k, w in row.items():
+        mask |= w << (k << 6)
+    return mask
+
+
+def _row_from_int(mask: int) -> dict[int, int]:
+    """Inverse of :func:`_row_to_int`."""
+    row: dict[int, int] = {}
+    k = 0
+    while mask:
+        w = mask & 0xFFFFFFFFFFFFFFFF
+        if w:
+            row[k] = w
+        mask >>= 64
+        k += 1
+    return row
+
+
 @dataclass
 class _RegionIndex:
     """Maintained structure over one dispatch region's task graph.
@@ -155,17 +257,25 @@ class _RegionIndex:
     :meth:`GraphRewriteSession.creates_cycle`, which becomes two bitwise
     ANDs instead of a DFS.
 
-    Rows are **bitmasks** (arbitrary-precision ints): each task owns a
+    Rows are **blocked bitsets** (``dict[block -> 64-bit word]``, zero
+    words never stored — see the row helpers above): each task owns a
     bit position for the index's lifetime (merged tasks append new
-    bits), so a closure row of a 100-task region is two machine words
-    and the per-fuse row rewrites — the dominant maintenance cost with
-    set rows — are single ``(row & kill) | add`` expressions.  Bitmask
-    rows are also immutable, which makes the exact-rollback contract
-    free: undo logs store the previous int, nothing can alias.
+    bits), so the per-fuse row rewrites — the dominant maintenance cost
+    with set rows — are single ``(row & kill) | add`` folds over the
+    *occupied* blocks only.  Dense int rows were the previous
+    representation; they stay exact but pay for every bit below the
+    highest set one, which at 10k tasks costs ~12 MB of closure rows and
+    an O(n²) build even when the closure is band-structured.  Blocked
+    rows keep both linear in the occupancy, and the rows stay immutable
+    by convention (helpers return fresh dicts), so the exact-rollback
+    contract is unchanged: undo logs store the previous row object,
+    nothing can alias.  ``tests/test_blocked_rows.py`` pins blocked ==
+    int-row == from-scratch-DFS closures on every rewrite.
 
     Interval/ILP-style orders were considered and rejected: they answer
     reachability in O(1) but cost O(region) relabelling per contraction,
-    while closure rows cost O(changed rows · words) and stay exact.
+    while closure rows cost O(changed rows · occupied blocks) and stay
+    exact.
 
     ``rank`` is a program-order rank: it respects the region list order
     at all times (fusing assigns the merged task the lower of its
@@ -183,27 +293,84 @@ class _RegionIndex:
     ops: dict[int, Op]
     bit: dict[int, int]
     by_bit: list[Op]
-    succ: dict[int, int]
-    pred: dict[int, int]
-    reach: dict[int, int]
-    rreach: dict[int, int]
+    succ: dict[int, dict[int, int]]
+    pred: dict[int, dict[int, int]]
+    reach: dict[int, dict[int, int]]
+    rreach: dict[int, dict[int, int]]
     rank: dict[int, int]
     #: bumped whenever reachability may have been *reduced* (the
     #: vanished-edge fuse fallback, split) — pure contraction never bumps.
     #: Worklists that cached a cycle verdict must reseed when it changes.
     epoch: int = 0
 
-    def tasks(self, mask: int) -> list[Op]:
-        return [self.by_bit[b] for b in _bits(mask)]
+    def tasks(self, row: dict[int, int]) -> list[Op]:
+        return [self.by_bit[b] for b in _row_bits(row)]
 
 
-def _closure_rows(n: int, succ: list[int], pred: list[int]) -> tuple[
-        list[int], list[int]]:
+def _closure_rows(n: int, succ: list[dict[int, int]],
+                  pred: list[dict[int, int]]) -> tuple[
+        list[dict[int, int]], list[dict[int, int]]]:
     """Transitive closure (and inverse) of the DAG given as per-position
-    successor/predecessor bitmask rows — one Kahn walk plus one OR per
-    edge.  Falls back to per-node DFS if the input has a cycle (cannot
-    happen for SSA-derived regions, but a query index must not
-    infinite-loop on degenerate input)."""
+    blocked successor/predecessor rows — one Kahn walk plus one
+    OR-per-occupied-block per edge (never touches the empty blocks a
+    dense row representation would).  Falls back to per-node DFS if the
+    input has a cycle (cannot happen for SSA-derived regions, but a
+    query index must not infinite-loop on degenerate input)."""
+    indeg = [_row_count(pred[i]) for i in range(n)]
+    stack = [i for i in range(n) if indeg[i] == 0]
+    order: list[int] = []
+    while stack:
+        i = stack.pop()
+        order.append(i)
+        for j in _row_bits(succ[i]):
+            indeg[j] -= 1
+            if indeg[j] == 0:
+                stack.append(j)
+    reach: list[dict[int, int]] = [{} for _ in range(n)]
+    rreach: list[dict[int, int]] = [{} for _ in range(n)]
+    if len(order) == n:
+        for i in reversed(order):
+            r: dict[int, int] = {}
+            for j in _row_bits(succ[i]):
+                r[j >> 6] = r.get(j >> 6, 0) | 1 << (j & 63)
+                for k, w in reach[j].items():
+                    r[k] = r.get(k, 0) | w
+            reach[i] = r
+        for i in order:
+            rr: dict[int, int] = {}
+            for j in _row_bits(pred[i]):
+                rr[j >> 6] = rr.get(j >> 6, 0) | 1 << (j & 63)
+                for k, w in rreach[j].items():
+                    rr[k] = rr.get(k, 0) | w
+            rreach[i] = rr
+    else:
+        for i in range(n):
+            seen: set[int] = set()
+            work = list(_row_bits(succ[i]))
+            while work:
+                j = work.pop()
+                if j in seen:
+                    continue
+                seen.add(j)
+                work.extend(_row_bits(succ[j]))
+            seen.discard(i)
+            row: dict[int, int] = {}
+            for j in seen:
+                row[j >> 6] = row.get(j >> 6, 0) | 1 << (j & 63)
+            reach[i] = row
+        for i in range(n):
+            for j in _row_bits(reach[i]):
+                rw = rreach[j]
+                rw[i >> 6] = rw.get(i >> 6, 0) | 1 << (i & 63)
+    return reach, rreach
+
+
+def _closure_rows_int(n: int, succ: list[int], pred: list[int]) -> tuple[
+        list[int], list[int]]:
+    """Reference transitive closure over dense int bitmask rows — the
+    previous representation, kept as the differential oracle the blocked
+    closure is property-tested against (``tests/test_blocked_rows.py``
+    asserts blocked == int on every rewrite of a random-DAG sweep)."""
     indeg = [pred[i].bit_count() for i in range(n)]
     stack = [i for i in range(n) if indeg[i] == 0]
     order: list[int] = []
@@ -247,21 +414,27 @@ def _closure_rows(n: int, succ: list[int], pred: list[int]) -> tuple[
 
 def _build_region_index(topo: GraphTopology, d: Op) -> _RegionIndex:
     """From-scratch index for dispatch ``d`` — built once per dispatch,
-    then maintained across fuses (O(region² + region·edges), paid one
-    time)."""
+    then maintained across fuses.  Direct edges come from an inverted
+    value→consumers map (O(region + edges), identical edge set to the
+    former all-pairs ``produces(i) & consumes(j)`` scan, which was the
+    O(region²) wall at 5k+ tasks), and the closure build touches only
+    occupied blocks."""
     region = list(d.region)
     n = len(region)
-    prods = [topo.produces(t) for t in region]
-    cons = [topo.consumes(t) for t in region]
-    succ = [0] * n
-    pred = [0] * n
-    for i in range(n):
-        row = 0
-        for j in range(n):
-            if i != j and prods[i] & cons[j]:
-                row |= 1 << j
-                pred[j] |= 1 << i
-        succ[i] = row
+    succ: list[dict[int, int]] = [{} for _ in range(n)]
+    pred: list[dict[int, int]] = [{} for _ in range(n)]
+    cons_at: dict[str, list[int]] = {}
+    for j, t in enumerate(region):
+        for v in topo.consumes(t):
+            cons_at.setdefault(v, []).append(j)
+    for i, t in enumerate(region):
+        row = succ[i]
+        for v in topo.produces(t):
+            for j in cons_at.get(v, ()):
+                if j != i:
+                    row[j >> 6] = row.get(j >> 6, 0) | 1 << (j & 63)
+                    pr = pred[j]
+                    pr[i >> 6] = pr.get(i >> 6, 0) | 1 << (i & 63)
     reach, rreach = _closure_rows(n, succ, pred)
     ids = [id(t) for t in region]
     return _RegionIndex(
@@ -271,6 +444,19 @@ def _build_region_index(topo: GraphTopology, d: Op) -> _RegionIndex:
         succ=dict(zip(ids, succ)), pred=dict(zip(ids, pred)),
         reach=dict(zip(ids, reach)), rreach=dict(zip(ids, rreach)),
         rank=dict(zip(ids, range(n))))
+
+
+def region_index_bytes(idx: _RegionIndex) -> int:
+    """Logical byte footprint of a region index: 8 bytes per occupied
+    64-bit closure-row block across all four row families, plus one word
+    per rank/bit entry.  This counts the information the index holds —
+    not CPython dict overhead — so it is comparable across
+    representations and is what the bench memory gate tracks."""
+    total = 0
+    for table in (idx.succ, idx.pred, idx.reach, idx.rreach):
+        for row in table.values():
+            total += _row_bytes(row)
+    return total + 8 * (len(idx.rank) + len(idx.bit))
 
 
 def region_index_fingerprint(idx: _RegionIndex) -> dict:
@@ -309,6 +495,11 @@ class GraphRewriteSession:
         self._canonicalized = False
         self._open = True
         self._selfcheck = selfcheck
+        #: peak logical footprint of the maintained region indices
+        #: (:func:`region_index_bytes` summed over live dispatches),
+        #: sampled at every index build and at commit — surfaced through
+        #: ``FusionStats.index_peak_bytes`` into the bench memory gate.
+        self.index_peak_bytes = 0
 
     # -- lifecycle ----------------------------------------------------------
     def __enter__(self) -> "GraphRewriteSession":
@@ -340,6 +531,7 @@ class GraphRewriteSession:
         next ``graph.topology()`` rebuilds lazily)."""
         self._check_open()
         fault_point("rewrite.commit")
+        self._sample_index_bytes()
         self._open = False
         g = self.graph
         if self._canonicalized:
@@ -410,13 +602,19 @@ class GraphRewriteSession:
             self._regions[id(d)] = idx
             self._pins.extend(d.region)
             self._pins.append(d)
+            self._sample_index_bytes()
         return idx
+
+    def _sample_index_bytes(self) -> None:
+        total = sum(region_index_bytes(i) for i in self._regions.values())
+        if total > self.index_peak_bytes:
+            self.index_peak_bytes = total
 
     def adjacent(self, d: Op, a: Op, b: Op) -> bool:
         """True when a feeds b or b feeds a through any value."""
         idx = self._ensure_region(d)
-        return bool(idx.succ[id(a)] >> idx.bit[id(b)] & 1
-                    or idx.succ[id(b)] >> idx.bit[id(a)] & 1)
+        return (_row_has(idx.succ[id(a)], idx.bit[id(b)])
+                or _row_has(idx.succ[id(b)], idx.bit[id(a)]))
 
     def adjacent_pairs(self, d: Op) -> list[tuple[Op, Op]]:
         """Every adjacent task pair of dispatch ``d``, one entry per
@@ -431,7 +629,7 @@ class GraphRewriteSession:
         """Tasks adjacent to ``t`` (either direction), deduplicated."""
         idx = self._ensure_region(d)
         tid = id(t)
-        return idx.tasks(idx.succ[tid] | idx.pred[tid])
+        return idx.tasks(_row_or(idx.succ[tid], idx.pred[tid]))
 
     def neighbors_in_order(self, d: Op, t: Op) -> list[Op]:
         """:meth:`neighbors` sorted by region program order — what a
@@ -439,7 +637,7 @@ class GraphRewriteSession:
         O(region) walk."""
         idx = self._ensure_region(d)
         tid = id(t)
-        out = idx.tasks(idx.succ[tid] | idx.pred[tid])
+        out = idx.tasks(_row_or(idx.succ[tid], idx.pred[tid]))
         out.sort(key=lambda u: idx.rank[id(u)])
         return out
 
@@ -485,8 +683,8 @@ class GraphRewriteSession:
         :meth:`split` can remove paths and bump the epoch."""
         idx = self._ensure_region(d)
         ia, ib = id(a), id(b)
-        return bool(idx.reach[ia] & idx.rreach[ib]
-                    or idx.reach[ib] & idx.rreach[ia])
+        return (_row_intersects(idx.reach[ia], idx.rreach[ib])
+                or _row_intersects(idx.reach[ib], idx.rreach[ia]))
 
     def _invalidate_ancestors(self, d: Op) -> None:
         """Drop the rollup memos of ``d`` and every enclosing region op:
@@ -510,11 +708,12 @@ class GraphRewriteSession:
         preserving program order (transparent regions make this a pure
         re-wrap).  The merged task's rollups come from O(1) set algebra
         over the memoized operands; the region index is maintained in
-        O(Δ): direct edges are re-derived in one O(region) pass, and only
-        the closure rows of tasks whose reachability actually changed
-        (the merged task's ancestors and descendants) are rewritten.
-        Every touched row's previous value is logged for an exact
-        inverse, so rollback restores the index bit-for-bit."""
+        O(Δ): direct edges fold from the fused pair's rows, and only the
+        closure rows of tasks whose reachability actually changed (the
+        merged task's ancestors and descendants) are rewritten — each
+        fold touching just that row's occupied blocks.  Every touched
+        row's previous value is logged for an exact inverse, so rollback
+        restores the index bit-for-bit."""
         self._check_open()
         idx = self._ensure_region(d)
         region = d.region
@@ -541,42 +740,52 @@ class GraphRewriteSession:
         # the incremental closure formula is invalid and the index is
         # rebuilt (rare: it needs a multi-produced Functional value).
         bf, bs = idx.bit[fid], idx.bit[sid]
-        kill = ~((1 << bf) | (1 << bs))
-        succ_m = (idx.succ[fid] | idx.succ[sid]) & kill
-        pred_renamed = (idx.pred[fid] | idx.pred[sid]) & kill
-        pred_m = 0
-        for pos in _bits(pred_renamed):
+        succ_m = _row_fold(_row_or(idx.succ[fid], idx.succ[sid]),
+                           bf, bs, _ROW_EMPTY)
+        pred_renamed = _row_fold(_row_or(idx.pred[fid], idx.pred[sid]),
+                                 bf, bs, _ROW_EMPTY)
+        pred_m: dict[int, int] = {}
+        vanished = False
+        for pos in _row_bits(pred_renamed):
             if topo.produces(idx.by_bit[pos]) & mcons:
-                pred_m |= 1 << pos
+                pred_m[pos >> 6] = pred_m.get(pos >> 6, 0) | 1 << (pos & 63)
+            else:
+                vanished = True
 
-        if pred_m == pred_renamed:
-            # Pure contraction: maintain in O(Δ).  Rows are ints —
-            # immutable — so the undo log just keeps the previous value;
-            # only rows incident to m's ancestors / descendants change.
+        if not vanished:
+            # Pure contraction: maintain in O(Δ).  Rows are treated as
+            # immutable (folds allocate fresh dicts), so the undo log
+            # just keeps the previous row object; only rows incident to
+            # m's ancestors / descendants change, and each fold touches
+            # only that row's occupied blocks.
             bm = len(idx.by_bit)
             idx.by_bit.append(merged)
-            add_m = 1 << bm
-            old_rows: list[tuple[dict, int, int]] = []
-            reach_m = (idx.reach[fid] | idx.reach[sid]) & kill
-            rreach_m = (idx.rreach[fid] | idx.rreach[sid]) & kill
-            for pos in _bits(pred_m):
+            add_m = {bm >> 6: 1 << (bm & 63)}
+            old_rows: list[tuple[dict, int, dict]] = []
+            reach_m = _row_fold(_row_or(idx.reach[fid], idx.reach[sid]),
+                                bf, bs, _ROW_EMPTY)
+            rreach_m = _row_fold(_row_or(idx.rreach[fid], idx.rreach[sid]),
+                                 bf, bs, _ROW_EMPTY)
+            for pos in _row_bits(pred_m):
                 tid = id(idx.by_bit[pos])
                 old_rows.append((idx.succ, tid, idx.succ[tid]))
-                idx.succ[tid] = (idx.succ[tid] & kill) | add_m
-            for pos in _bits(succ_m):
+                idx.succ[tid] = _row_fold(idx.succ[tid], bf, bs, add_m)
+            for pos in _row_bits(succ_m):
                 tid = id(idx.by_bit[pos])
                 old_rows.append((idx.pred, tid, idx.pred[tid]))
-                idx.pred[tid] = (idx.pred[tid] & kill) | add_m
-            add_reach = add_m | reach_m
-            for pos in _bits(rreach_m):
+                idx.pred[tid] = _row_fold(idx.pred[tid], bf, bs, add_m)
+            add_reach = _row_or(reach_m, add_m)
+            for pos in _row_bits(rreach_m):
                 tid = id(idx.by_bit[pos])
                 old_rows.append((idx.reach, tid, idx.reach[tid]))
-                idx.reach[tid] = (idx.reach[tid] & kill) | add_reach
-            add_rreach = add_m | rreach_m
-            for pos in _bits(reach_m):
+                idx.reach[tid] = _row_fold(idx.reach[tid], bf, bs,
+                                           add_reach)
+            add_rreach = _row_or(rreach_m, add_m)
+            for pos in _row_bits(reach_m):
                 tid = id(idx.by_bit[pos])
                 old_rows.append((idx.rreach, tid, idx.rreach[tid]))
-                idx.rreach[tid] = (idx.rreach[tid] & kill) | add_rreach
+                idx.rreach[tid] = _row_fold(idx.rreach[tid], bf, bs,
+                                            add_rreach)
             popped: list[tuple[dict, int, object]] = []
             for table in (idx.succ, idx.pred, idx.reach, idx.rreach,
                           idx.rank, idx.ops, idx.bit):
@@ -614,6 +823,7 @@ class GraphRewriteSession:
                         for tid in idx.ops}
             idx.epoch = old_idx.epoch + 1
             self._regions[id(d)] = idx
+            self._sample_index_bytes()
 
             def undo_index() -> None:
                 self._regions[id(d)] = old_idx
@@ -659,6 +869,7 @@ class GraphRewriteSession:
         new_idx = _build_region_index(self._base, d)
         new_idx.epoch = old_idx.epoch + 1   # reachability may have shrunk
         self._regions[id(d)] = new_idx
+        self._sample_index_bytes()
         self._invalidate_ancestors(d)
 
         def undo() -> None:
@@ -849,8 +1060,25 @@ class ScheduleRewriteSession:
         self._consumers = {b: list(v) for b, v in self._base.consumers.items()}
         self._pos = {n.name: i for i, n in enumerate(sched.nodes)}
         self._dirty: set[str] = set()
+        # Per-buffer edge buckets: the canonical edge list is the
+        # concatenation of buckets in ``sched.buffers`` order, and a
+        # rewrite only invalidates the buckets of the buffers it touched
+        # — a 1k-dispatch balance pass regenerates a handful of buckets
+        # instead of re-deriving the whole O(buffers·degree) list.
+        self._edge_buckets: dict[str, list[tuple[str, str, str]]] = {}
+        for e in self._base.edges:
+            self._edge_buckets.setdefault(e[2], []).append(e)
+        self._stale_buckets: set[str] = set()
         self._edges: Optional[list[tuple[str, str, str]]] = list(
             self._base.edges)
+        # Memoized order/depth over the maintained edges.  The depth map
+        # is Δ-maintained across pure insertions (add_node can only
+        # deepen paths through the new node — a bounded worklist
+        # propagation); any shrinking primitive drops it for a lazy full
+        # recompute.  Equality with the from-scratch walks is pinned by
+        # tests/test_rewrite.py.
+        self._order_memo: Optional[list[Node]] = None
+        self._depth_memo: Optional[dict[str, int]] = None
         self._undo: list[Callable[[], None]] = []
         self._open = True
         self._selfcheck = selfcheck
@@ -983,43 +1211,73 @@ class ScheduleRewriteSession:
 
     def _edge_list(self) -> list[tuple[str, str, str]]:
         if self._edges is None:
-            edges = []
-            for buf in self.sched.buffers:
-                for p in self._producers.get(buf, ()):
-                    for c in self._consumers.get(buf, ()):
+            buckets = self._edge_buckets
+            for b in self._stale_buckets:
+                bucket = []
+                for p in self._producers.get(b, ()):
+                    for c in self._consumers.get(b, ()):
                         if p.name != c.name:
-                            edges.append((p.name, c.name, buf))
-            self._edges = edges
+                            bucket.append((p.name, c.name, b))
+                if bucket:
+                    buckets[b] = bucket
+                else:
+                    buckets.pop(b, None)
+            self._stale_buckets.clear()
+            self._edges = [e for b in self.sched.buffers if b in buckets
+                           for e in buckets[b]]
         return self._edges
 
     def edges(self) -> list[tuple[str, str, str]]:
         """(src, dst, buffer) edges over the current structure, in the
-        canonical ``ScheduleTopology.build`` order (regenerated from the
-        Δ-maintained indices only when a rewrite invalidated them)."""
+        canonical ``ScheduleTopology.build`` order (only the buckets of
+        buffers a rewrite touched are regenerated from the Δ-maintained
+        indices; untouched buckets are reused verbatim)."""
         return list(self._edge_list())
 
     def topo_order(self) -> list[Node]:
-        return topo_order_over(self.sched.nodes, self._edge_list(),
-                               self.sched.name)
+        """Stable topological order over the maintained edges, memoized
+        until the next structural rewrite (stage-assignment and the
+        region partitioner query it repeatedly between rewrites)."""
+        if self._order_memo is None:
+            self._order_memo = topo_order_over(
+                self.sched.nodes, self._edge_list(), self.sched.name)
+        return list(self._order_memo)
 
     def depth_of(self) -> dict[str, int]:
-        return depth_map_over(self.sched.nodes, self._edge_list(),
-                              self.sched.name)
+        """Longest-path depth per node over the maintained edges.
+        Memoized, and Δ-maintained across :meth:`add_node` (a pure
+        insertion only deepens paths through the new node, so a bounded
+        worklist propagation replaces the full O(V+E) rebuild the
+        balance pass used to pay per query)."""
+        if self._depth_memo is None:
+            self._depth_memo = depth_map_over(
+                self.sched.nodes, self._edge_list(), self.sched.name)
+        return dict(self._depth_memo)
 
-    def dse_regions(self, *, max_cut: int = 2, min_nodes: int = 3,
-                    max_nodes: int = 16) -> "list[RegionSpec]":
+    def dse_regions(self, *, max_cut: int = 2,
+                    min_nodes: int | None = None,
+                    max_nodes: int | None = None) -> "list[RegionSpec]":
         """Region partition for the hierarchical DSE over the session's
         Δ-maintained edge list (same contract as the module-level
         :func:`dse_regions`, without forcing a topology rebuild
-        mid-session)."""
+        mid-session).  ``min_nodes`` / ``max_nodes`` default to the
+        scale-aware :func:`default_region_bounds`."""
+        mn, mx = default_region_bounds(len(self.sched.nodes))
         return _dse_regions_over(self.sched.nodes, self._edge_list(),
                                  self.sched.name, max_cut=max_cut,
-                                 min_nodes=min_nodes, max_nodes=max_nodes)
+                                 min_nodes=mn if min_nodes is None
+                                 else min_nodes,
+                                 max_nodes=mx if max_nodes is None
+                                 else max_nodes,
+                                 order=self.topo_order())
 
     # -- index maintenance ---------------------------------------------------
     def _touch(self, *values: str) -> None:
         self._dirty.update(values)
+        self._stale_buckets.update(values)
         self._edges = None
+        self._order_memo = None
+        self._depth_memo = None
 
     def _reindex_positions(self) -> None:
         self._pos = {n.name: i for i, n in enumerate(self.sched.nodes)}
@@ -1042,6 +1300,36 @@ class ScheduleRewriteSession:
         lst = index.get(value)
         if lst is not None:
             _remove_identical(lst, node)
+
+    def _propagate_depth(self, depth: dict[str, int], node: Node
+                         ) -> Optional[dict[str, int]]:
+        """Depth map after inserting ``node``: a pure insertion only
+        *adds* edges, and longest-path depth is monotone under edge
+        addition, so relaxing from the insertion point reproduces the
+        full recompute exactly.  Returns ``None`` — forcing the lazy
+        full rebuild — if the relaxation fails to settle within a
+        generous pop budget (only possible when the insertion created a
+        cycle, where the rebuild is the path that raises)."""
+        d0 = 0
+        for b in node.reads():
+            for p in self._producers.get(b, ()):
+                if p is not node and p.name in depth:
+                    d0 = max(d0, depth[p.name] + 1)
+        depth[node.name] = d0
+        budget = 8 * (len(depth) + 1)
+        work = [node]
+        while work:
+            budget -= 1
+            if budget < 0:
+                return None
+            src = work.pop()
+            ds = depth[src.name]
+            for b in src.writes():
+                for c in self._consumers.get(b, ()):
+                    if c is not src and depth.get(c.name, 0) < ds + 1:
+                        depth[c.name] = ds + 1
+                        work.append(c)
+        return depth
 
     def _sync_arg_index(self, node: Node, value: str) -> None:
         """Make the two indices agree with ``node.args.get(value)``."""
@@ -1073,20 +1361,53 @@ class ScheduleRewriteSession:
         argument effects."""
         self._check_open()
         sched = self.sched
-        if any(n.name == node.name for n in sched.nodes):
+        # _pos mirrors sched.nodes exactly, so membership there is the
+        # duplicate check (the old any() scan was O(n) per insert —
+        # quadratic over a 5k-node lowering).
+        if node.name in self._pos:
             raise RewriteError(f"duplicate node {node.name}")
-        old_nodes = list(sched.nodes)
-        sched.nodes.insert(len(sched.nodes) if index is None else index,
-                           node)
-        self._reindex_positions()
+        at = len(sched.nodes) if index is None else index
+        sched.nodes.insert(at, node)
+        if at == len(sched.nodes) - 1:
+            # Append fast path: no existing position shifts, so the
+            # full O(n) renumber reduces to one dict store.
+            self._pos[node.name] = at
+        else:
+            # Mid-insert: only suffix positions shift, so bump those in
+            # place instead of rebuilding the whole dict (balance does
+            # ~n mid-inserts; full rebuilds made that quadratic).
+            pos = self._pos
+            for n in sched.nodes[at + 1:]:
+                pos[n.name] += 1
+            pos[node.name] = at
+        # Keep the schedule's name→Node lookup cache live instead of
+        # letting the length change force an O(n) rebuild per insert
+        # (balance alone does ~n inserts).
+        if sched._node_cache is not None:
+            sched._node_cache[node.name] = node
+            sched._node_cache_len = len(sched.nodes)
         for b in node.writes():
             self._index_insert(self._producers, b, node)
         for b in node.reads():
             self._index_insert(self._consumers, b, node)
+        depth = self._depth_memo
         self._touch(*node.args)
+        if depth is not None:
+            # Pure insertion: Δ-maintain the depth memo instead of
+            # letting _touch force a full O(V+E) rebuild on next query.
+            self._depth_memo = self._propagate_depth(depth, node)
 
         def undo() -> None:
-            sched.nodes[:] = old_nodes
+            # Undos run LIFO, so the list state here is exactly the
+            # post-insert state: a positional delete is the precise
+            # inverse (and O(1) at the tail, vs the old O(n) snapshot
+            # copy taken on every insert).  Mirror the insert's
+            # shift-only position update.
+            del sched.nodes[at]
+            pos = self._pos
+            del pos[node.name]
+            for n in sched.nodes[at:]:
+                pos[n.name] -= 1
         self._undo.append(undo)
         self._after()
         return node
@@ -1098,6 +1419,10 @@ class ScheduleRewriteSession:
         old_nodes = list(sched.nodes)
         if not _remove_identical(sched.nodes, node):
             raise RewriteError(f"unknown node {node.name}")
+        # Drop (not patch) the name cache: a later 1-for-1 replace keeps
+        # the list length, so the length check alone can't catch a stale
+        # hit on the retired name.
+        sched._node_cache = None
         self._reindex_positions()
         for b in node.writes():
             self._index_discard(self._producers, b, node)
@@ -1107,6 +1432,9 @@ class ScheduleRewriteSession:
 
         def undo() -> None:
             sched.nodes[:] = old_nodes
+            # add_node's shift-only undo assumes _pos mirrors the list,
+            # so restoring the list must restore the mirror too.
+            self._reindex_positions()
         self._undo.append(undo)
         self._after()
 
@@ -1123,6 +1451,9 @@ class ScheduleRewriteSession:
             if not _remove_identical(sched.nodes, o):
                 raise RewriteError(f"unknown node {o.name}")
         sched.nodes.insert(index, new)
+        # See retire_node: a 1-for-1 swap preserves the list length, so
+        # the name cache must be dropped, not patched.
+        sched._node_cache = None
         self._reindex_positions()
         touched: set[str] = set(new.args)
         for o in olds:
@@ -1139,6 +1470,8 @@ class ScheduleRewriteSession:
 
         def undo() -> None:
             sched.nodes[:] = old_nodes
+            # See retire_node's undo: keep the _pos mirror in sync.
+            self._reindex_positions()
         self._undo.append(undo)
         self._after()
         return new
@@ -1384,10 +1717,26 @@ class RegionSpec:
     boundary: tuple[tuple[str, str, str], ...]
 
 
+def default_region_bounds(n: int) -> tuple[int, int]:
+    """Scale-aware ``(min_nodes, max_nodes)`` for :func:`dse_regions`.
+
+    Schedules up to 256 nodes get the historical ``(3, 16)`` — every
+    existing config (≤43 nodes) partitions bit-identically.  Beyond
+    that, the region cap grows as ~√n, so region count and per-region
+    inner-DSE cost grow together: at 10k nodes the fixed cap would
+    produce ~600 three-to-sixteen-node regions (outer composition
+    dominates), while √n yields ~100 regions of ~100 nodes — both
+    levels stay beam-sized."""
+    if n <= 256:
+        return 3, 16
+    mx = max(16, math.isqrt(n - 1) + 1)
+    return max(3, mx // 5), mx
+
+
 def dse_regions(sched: Schedule,
                 topology: ScheduleTopology | None = None, *,
-                max_cut: int = 2, min_nodes: int = 3,
-                max_nodes: int = 16) -> list[RegionSpec]:
+                max_cut: int = 2, min_nodes: int | None = None,
+                max_nodes: int | None = None) -> list[RegionSpec]:
     """Partition ``sched`` into dispatch regions for the hierarchical DSE.
 
     Walks the stable topological order and cuts at boundaries crossed by
@@ -1398,21 +1747,32 @@ def dse_regions(sched: Schedule,
     on node *names*, so the partition — and every boundary signature
     derived from it — is stable under node renaming.
 
+    ``min_nodes`` / ``max_nodes`` default to the scale-aware
+    :func:`default_region_bounds` (identical to the historical ``(3,
+    16)`` for schedules up to 256 nodes).
+
     Returns a single whole-schedule region when the schedule is too small
     to split (callers treat that as "run the flat beam").
     """
     topo = topology if topology is not None else sched.topology()
+    mn, mx = default_region_bounds(len(sched.nodes))
     return _dse_regions_over(sched.nodes, topo.edges, sched.name,
-                             max_cut=max_cut, min_nodes=min_nodes,
-                             max_nodes=max_nodes)
+                             max_cut=max_cut,
+                             min_nodes=mn if min_nodes is None
+                             else min_nodes,
+                             max_nodes=mx if max_nodes is None
+                             else max_nodes)
 
 
 def _dse_regions_over(nodes: Sequence[Node],
                       edge_iter: Iterable[tuple[str, str, str]],
                       name: str, *, max_cut: int, min_nodes: int,
-                      max_nodes: int) -> list[RegionSpec]:
+                      max_nodes: int,
+                      order: Sequence[Node] | None = None
+                      ) -> list[RegionSpec]:
     edges = list(edge_iter)
-    order = topo_order_over(nodes, edges, name)
+    if order is None:
+        order = topo_order_over(nodes, edges, name)
     names = [n.name for n in order]
     n = len(names)
     if n < 2 * min_nodes:
@@ -1420,14 +1780,22 @@ def _dse_regions_over(nodes: Sequence[Node],
 
     pos = {nm: i for i, nm in enumerate(names)}
     # crossing[b] = edges spanning the boundary between order[b-1] and
-    # order[b]; an edge (s, d) crosses every boundary in (pos[s], pos[d]].
-    crossing = [0] * (n + 1)
+    # order[b]; an edge (s, d) crosses every boundary in (pos[s], pos[d]]
+    # — accumulated as a difference array (+1 at lo+1, −1 at hi+1, prefix
+    # sum), O(E + n) instead of the former O(E · span) inner loop that
+    # dominated at 5k+ nodes.
+    diff = [0] * (n + 2)
     for s, d, _b in edges:
         lo, hi = pos[s], pos[d]
         if lo > hi:
             lo, hi = hi, lo
-        for b in range(lo + 1, hi + 1):
-            crossing[b] += 1
+        diff[lo + 1] += 1
+        diff[hi + 1] -= 1
+    crossing = [0] * (n + 1)
+    run = 0
+    for b in range(n + 1):
+        run += diff[b]
+        crossing[b] = run
 
     cuts: list[int] = []
     start = 0

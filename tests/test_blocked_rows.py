@@ -1,0 +1,292 @@
+"""Property tests for the blocked closure rows (``repro.core.rewrite``).
+
+The region reachability index stores closure rows as sparse maps of
+64-bit word blocks (``{block_index: word}``).  Three independent
+implementations of the same closure must agree bit-for-bit:
+
+1. the **blocked** builder ``_closure_rows`` (production),
+2. the **dense-int** builder ``_closure_rows_int`` (the previous
+   representation, kept as the differential oracle),
+3. a **from-scratch per-node DFS** written here, sharing no code with
+   either.
+
+On top of the pure-function sweep, a rewrite sweep fuses random legal
+pairs of a random-DAG dispatch region with ``selfcheck=True`` (so the
+session itself asserts maintained == fresh after every rewrite) and
+cross-checks the *maintained* rows against the int oracle, then rolls
+back and asserts the index fingerprint is restored bit-exactly.  A
+dedicated test drives the rare vanished-edge path (a multi-produced
+value) on a ≥1k-task region and checks the epoch-bumping rebuild.
+"""
+import random
+
+import pytest
+
+from repro.core.ir import Graph, Op, make_dispatch, make_task, \
+    reset_fresh_names
+from repro.core.rewrite import (GraphRewriteSession, _bits,
+                                _build_region_index, _closure_rows,
+                                _closure_rows_int, _row_bits, _row_bytes,
+                                _row_count, _row_fold, _row_from_int,
+                                _row_has, _row_intersects, _row_or, _row_set,
+                                _row_to_int, default_region_bounds,
+                                dse_regions, region_index_bytes,
+                                region_index_fingerprint)
+
+_WORD = (1 << 64) - 1
+
+
+# --------------------------------------------------------------------------
+# Row primitives vs. plain int-bitmask semantics
+# --------------------------------------------------------------------------
+
+def _random_mask(rng, nbits):
+    return rng.getrandbits(nbits)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_row_primitives_match_int_semantics(seed):
+    rng = random.Random(seed)
+    for nbits in (1, 17, 63, 64, 65, 128, 200, 400):
+        a_i, b_i = _random_mask(rng, nbits), _random_mask(rng, nbits)
+        a, b = _row_from_int(a_i), _row_from_int(b_i)
+        # round trip + no zero blocks ever stored
+        assert _row_to_int(a) == a_i and _row_to_int(b) == b_i
+        assert all(w != 0 for w in a.values())
+        assert _row_to_int(_row_or(a, b)) == a_i | b_i
+        assert _row_count(a) == a_i.bit_count()
+        assert _row_bytes(a) == 8 * len(a)
+        assert _row_intersects(a, b) == bool(a_i & b_i)
+        assert sorted(_row_bits(a)) == sorted(_bits(a_i))
+        for p in (0, nbits // 2, nbits - 1):
+            assert _row_has(a, p) == bool(a_i >> p & 1)
+            assert _row_to_int(_row_set(dict(a), p)) == a_i | 1 << p
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_row_fold_matches_int_semantics(seed):
+    rng = random.Random(100 + seed)
+    for nbits in (2, 64, 65, 190):
+        m = _random_mask(rng, nbits)
+        add_i = _random_mask(rng, nbits)
+        p1, p2 = rng.randrange(nbits), rng.randrange(nbits)
+        row = _row_from_int(m)
+        folded = _row_fold(row, p1, p2, _row_from_int(add_i))
+        expect = (m & ~(1 << p1) & ~(1 << p2)) | add_i
+        assert _row_to_int(folded) == expect
+        assert all(w != 0 for w in folded.values())
+        # fold allocates; the input row is treated as immutable
+        assert _row_to_int(row) == m
+
+
+# --------------------------------------------------------------------------
+# Closure: blocked == dense-int == from-scratch DFS
+# --------------------------------------------------------------------------
+
+def _random_dag_masks(rng, n, p):
+    succ = [0] * n
+    pred = [0] * n
+    for i in range(n):
+        for j in range(i + 1, n):
+            if rng.random() < p:
+                succ[i] |= 1 << j
+                pred[j] |= 1 << i
+    return succ, pred
+
+def _dfs_reach(n, succ):
+    """Independent oracle: plain per-node DFS over int adjacency."""
+    out = []
+    for i in range(n):
+        seen = set()
+        work = list(_bits(succ[i]))
+        while work:
+            j = work.pop()
+            if j not in seen:
+                seen.add(j)
+                work.extend(_bits(succ[j]))
+        seen.discard(i)
+        out.append(seen)
+    return out
+
+
+def _check_closures(n, succ_i, pred_i):
+    succ_b = [_row_from_int(m) for m in succ_i]
+    pred_b = [_row_from_int(m) for m in pred_i]
+    reach_b, rreach_b = _closure_rows(n, succ_b, pred_b)
+    reach_i, rreach_i = _closure_rows_int(n, succ_i, pred_i)
+    dfs = _dfs_reach(n, succ_i)
+    for i in range(n):
+        assert _row_to_int(reach_b[i]) == reach_i[i]
+        assert _row_to_int(rreach_b[i]) == rreach_i[i]
+        assert reach_i[i] == sum(1 << j for j in dfs[i])
+    rr_dfs = [set() for _ in range(n)]
+    for i in range(n):
+        for j in dfs[i]:
+            rr_dfs[j].add(i)
+    for i in range(n):
+        assert rreach_i[i] == sum(1 << j for j in rr_dfs[i])
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_closure_blocked_equals_int_equals_dfs(seed):
+    rng = random.Random(1000 + seed)
+    for n, p in ((1, 0.5), (5, 0.5), (63, 0.1), (64, 0.1), (65, 0.1),
+                 (130, 0.05), (257, 0.02)):
+        _check_closures(n, *_random_dag_masks(rng, n, p))
+
+
+def test_closure_cycle_fallback_agrees():
+    """Degenerate (cyclic) input takes the per-node DFS fallback in both
+    builders; they must still agree — including across a block boundary."""
+    rng = random.Random(7)
+    n = 140
+    succ, pred = _random_dag_masks(rng, n, 0.04)
+    # a 3-cycle spanning blocks 0/1/2
+    for i, j in ((10, 70), (70, 133), (133, 10)):
+        succ[i] |= 1 << j
+        pred[j] |= 1 << i
+    succ_b = [_row_from_int(m) for m in succ]
+    pred_b = [_row_from_int(m) for m in pred]
+    reach_b, rreach_b = _closure_rows(n, succ_b, pred_b)
+    reach_i, rreach_i = _closure_rows_int(n, succ, pred)
+    for i in range(n):
+        assert _row_to_int(reach_b[i]) == reach_i[i]
+        assert _row_to_int(rreach_b[i]) == rreach_i[i]
+    # the cycle members reach each other both ways
+    assert reach_i[10] >> 70 & 1 and reach_i[133] >> 10 & 1
+
+
+# --------------------------------------------------------------------------
+# Maintained index vs. int oracle across a random fuse sweep
+# --------------------------------------------------------------------------
+
+def _leaf(name, ins, outs):
+    return Op(name=name, kind="matmul", ins=ins, outs=outs,
+              loop_dims={"i": 8}, flops=8)
+
+
+def _dag_dispatch(rng, n, p):
+    """A dispatch whose task DAG mirrors a random int DAG exactly: task
+    ``i`` produces the unique value ``v{i}`` and reads one value per
+    predecessor edge (plus the external ``x`` so rootless tasks stay
+    legal)."""
+    succ, pred = _random_dag_masks(rng, n, p)
+    tasks = []
+    for i in range(n):
+        ins = [f"v{j}" for j in _bits(pred[i])] or ["x"]
+        tasks.append(make_task([_leaf(f"t{i}", ins, [f"v{i}"])]))
+    d = make_dispatch(tasks)
+    return Graph("g", ops=[d]), d
+
+
+def _maintained_matches_int_oracle(idx):
+    """Flatten the live maintained rows into the dense bit-space and
+    rebuild the closure with the int oracle; every live reach/rreach row
+    must match bit-for-bit."""
+    nbits = len(idx.by_bit)
+    succ_i = [0] * nbits
+    pred_i = [0] * nbits
+    for tid, b in idx.bit.items():
+        succ_i[b] = _row_to_int(idx.succ[tid])
+        pred_i[b] = _row_to_int(idx.pred[tid])
+    reach_i, rreach_i = _closure_rows_int(nbits, succ_i, pred_i)
+    for tid, b in idx.bit.items():
+        assert _row_to_int(idx.reach[tid]) == reach_i[b]
+        assert _row_to_int(idx.rreach[tid]) == rreach_i[b]
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_fuse_sweep_maintained_rows_match_int_oracle(seed):
+    reset_fresh_names()
+    rng = random.Random(2000 + seed)
+    g, d = _dag_dispatch(rng, 180, 0.04)
+    rs = GraphRewriteSession(g, selfcheck=True)  # maintained == fresh per fuse
+    idx = rs._ensure_region(d)
+    before = region_index_fingerprint(idx)
+    for _ in range(40):
+        pairs = [(a, b) for a, b in rs.adjacent_pairs(d)
+                 if not rs.creates_cycle(d, a, b)]
+        if not pairs:
+            break
+        rs.fuse(d, *pairs[rng.randrange(len(pairs))])
+        _maintained_matches_int_oracle(rs._ensure_region(d))
+    assert region_index_fingerprint(rs._ensure_region(d)) != before
+    rs.rollback()
+    assert region_index_fingerprint(rs._ensure_region(d)) == before
+
+
+# --------------------------------------------------------------------------
+# Vanished-edge epoch rebuild at ≥1k tasks
+# --------------------------------------------------------------------------
+
+def test_vanished_edge_rebuilds_and_bumps_epoch_at_1k_tasks():
+    """An edge into ``second`` through a value ``first`` also produces
+    vanishes under fusion (needs a multi-produced value); the session
+    must detect it, rebuild the index from scratch, and bump the epoch —
+    with the region holding ≥1k tasks so the rebuild exercises real
+    multi-block rows — and rollback must restore the old index object."""
+    reset_fresh_names()
+    p1 = make_task([_leaf("p1", ["x"], ["v"])])
+    p2 = make_task([_leaf("p2", ["x"], ["v"])])      # multi-produced "v"
+    c = make_task([_leaf("c", ["v"], ["w"])])
+    chain = []
+    for i in range(1001):
+        ins = ["x"] if i == 0 else [f"c{i - 1}"]
+        chain.append(make_task([_leaf(f"n{i}", ins, [f"c{i}"])]))
+    d = make_dispatch([p1, p2, c] + chain)
+    g = Graph("g", ops=[d])
+
+    rs = GraphRewriteSession(g, selfcheck=True)
+    idx0 = rs._ensure_region(d)
+    assert len(idx0.by_bit) >= 1000
+    before = region_index_fingerprint(idx0)
+    assert rs.region_epoch(d) == 0
+
+    merged = rs.fuse(d, p1, c)   # "v" becomes internal; edge p2→c vanishes
+    idx1 = rs._ensure_region(d)
+    assert idx1 is not idx0           # rebuilt, not maintained
+    assert rs.region_epoch(d) == 1    # cached cycle verdicts invalidated
+    assert region_index_bytes(idx1) > 0
+    _maintained_matches_int_oracle(idx1)
+    # ranks survive the rebuild: merged inherits first's, all unique
+    assert idx1.rank[id(merged)] == 0
+    live_ranks = sorted(idx1.rank.values())
+    assert len(live_ranks) == len(set(live_ranks))
+
+    rs.rollback()
+    assert rs._ensure_region(d) is idx0
+    assert region_index_fingerprint(rs._ensure_region(d)) == before
+    assert rs.region_epoch(d) == 0
+
+
+# --------------------------------------------------------------------------
+# Scale-aware region bounds: both regimes
+# --------------------------------------------------------------------------
+
+def test_default_region_bounds_small_regime_is_historical():
+    for n in (1, 16, 43, 100, 256):
+        assert default_region_bounds(n) == (3, 16)
+
+
+def test_default_region_bounds_scaled_regime():
+    prev_mx = 16
+    for n in (257, 500, 1000, 5000, 10000):
+        mn, mx = default_region_bounds(n)
+        assert mn >= 3 and mx > 16
+        assert mx >= prev_mx          # monotone in n
+        assert mn <= mx
+        assert mx * mx >= n - 1       # ~sqrt(n) cap actually scales
+        prev_mx = mx
+
+
+def test_dse_regions_defaults_bit_identical_below_threshold():
+    """For every ≤256-node schedule the scale-aware defaults must be a
+    no-op: the partition equals an explicit (3, 16) call."""
+    from golden_utils import build_pre_dse_schedule
+
+    sched = build_pre_dse_schedule("smollm-135m")
+    assert len(sched.nodes) <= 256
+    default = dse_regions(sched)
+    explicit = dse_regions(sched, min_nodes=3, max_nodes=16)
+    assert [r.nodes for r in default] == [r.nodes for r in explicit]
+    assert [r.boundary for r in default] == [r.boundary for r in explicit]

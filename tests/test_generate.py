@@ -1,0 +1,163 @@
+"""Synthetic scale-stress suite (``repro.core.generate``) + scale gates.
+
+Three layers of coverage:
+
+1. **Generator contract** — seeded determinism (bit-identical structure
+   across builds), spec sensitivity, op-count targeting, and registry
+   wiring (``repro.configs`` re-exports the synth ladder next to the
+   real archs).
+2. **Tier-1 smoke** — full ``optimize()`` on ``synth_1k`` must come out
+   verifier-clean with a live index-footprint report (fast lane).
+3. **Scale acceptance (slow lane)** — ``synth_5k`` holds the PR gate:
+   verifier-clean in < 20 s wall (best of two runs, so one scheduler
+   hiccup cannot flake the lane) with < 2 MB peak closure-index memory;
+   ``synth_10k`` is the headroom arm (no wall bound, memory gate only).
+
+The floor-rung estimator-context regression test lives here too: with
+the shared ``EstimateContext`` hoisted out of ``best_uniform``'s family
+scan, the whole scan must build exactly one context regardless of how
+many family members × regions it scores.
+"""
+import time
+
+import pytest
+
+from repro.configs import SYNTH_CONFIGS, get_synth, list_synths
+from repro.core.estimator import EstimateContext, MeshSpec
+from repro.core.generate import SynthSpec, build_synth_graph
+from repro.core.optimize import optimize
+
+MESH = MeshSpec((("data", 16), ("model", 16)))
+
+# --------------------------------------------------------------------------
+# Generator contract
+# --------------------------------------------------------------------------
+
+def test_registry_names_and_reexport():
+    assert list_synths() == ["synth_1k", "synth_5k", "synth_10k"]
+    with pytest.raises(KeyError):
+        get_synth("synth_999")
+    for name, spec in SYNTH_CONFIGS.items():
+        assert spec.name == name
+
+
+def test_build_is_deterministic_bit_identical():
+    spec = SYNTH_CONFIGS["synth_1k"]
+    a = build_synth_graph(spec)
+    b = build_synth_graph(spec)
+    assert a.structure_signature() == b.structure_signature()
+    assert ([(o.name, o.kind, tuple(o.ins), tuple(o.outs), o.flops)
+             for o in a.walk()]
+            == [(o.name, o.kind, tuple(o.ins), tuple(o.outs), o.flops)
+                for o in b.walk()])
+
+
+def test_build_depends_only_on_spec():
+    spec = SYNTH_CONFIGS["synth_1k"]
+    reseeded = SynthSpec(**{**spec.__dict__, "seed": spec.seed + 1})
+    assert (build_synth_graph(reseeded).structure_signature()
+            != build_synth_graph(spec).structure_signature())
+
+
+@pytest.mark.parametrize("name", ["synth_1k", "synth_5k", "synth_10k"])
+def test_op_count_lands_near_target(name):
+    spec = SYNTH_CONFIGS[name]
+    g = get_synth(name)
+    n = sum(1 for _ in g.walk())
+    assert abs(n - spec.n_ops) <= 0.15 * spec.n_ops
+
+
+def test_group_size_bounds_cross_links():
+    """group_size genuinely changes the wiring: removing the bound adds
+    cross-links (the transitively-composing shape the bound exists to
+    prevent), so the structures must differ."""
+    spec = SYNTH_CONFIGS["synth_1k"]
+    unbounded = SynthSpec(**{**spec.__dict__, "group_size": 0})
+    assert (build_synth_graph(unbounded).structure_signature()
+            != build_synth_graph(spec).structure_signature())
+
+
+# --------------------------------------------------------------------------
+# Tier-1 smoke: synth_1k end to end
+# --------------------------------------------------------------------------
+
+def test_synth_1k_optimize_smoke():
+    sched, plan, rep = optimize(get_synth("synth_1k"), MESH)
+    assert not rep.verify.issues
+    assert len(sched.nodes) > 500
+    assert rep.regions > 1                  # partitioned, not flat-beamed
+    assert rep.index_bytes > 0              # footprint report is live
+    assert rep.fusion.index_peak_bytes > 0
+    assert rep.fusion.index_peak_bytes < 2 * 1024 * 1024
+
+
+# --------------------------------------------------------------------------
+# Scale acceptance (slow lane)
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_synth_5k_under_20s_and_2mb():
+    best = float("inf")
+    for _ in range(2):                      # best-of-2: absorb one hiccup
+        t0 = time.perf_counter()
+        sched, plan, rep = optimize(get_synth("synth_5k"), MESH)
+        best = min(best, time.perf_counter() - t0)
+        assert not rep.verify.issues
+        assert rep.fusion.index_peak_bytes < 2 * 1024 * 1024
+        if best < 20.0:
+            break
+    assert best < 20.0, f"synth_5k optimize() took {best:.2f}s (gate: 20s)"
+
+
+@pytest.mark.slow
+def test_synth_10k_verifier_clean_memory_bounded():
+    sched, plan, rep = optimize(get_synth("synth_10k"), MESH)
+    assert not rep.verify.issues
+    assert len(sched.nodes) > 5000
+    assert rep.fusion.index_peak_bytes < 2 * 1024 * 1024
+
+
+# --------------------------------------------------------------------------
+# best_uniform builds exactly one EstimateContext
+# --------------------------------------------------------------------------
+
+def test_best_uniform_builds_one_estimate_context(monkeypatch):
+    """The family scan and every per-region retry reuse one hoisted
+    context: structure is assignment-independent, so rebuilding it per
+    estimate() call was O(members × edges) for nothing.  Count real
+    constructions to pin the hoist."""
+    import importlib
+
+    from repro.core.lower import lower_to_structural
+    from repro.core.parallelize import best_uniform
+    from repro.core.rewrite import dse_regions
+    est_mod = importlib.import_module("repro.core.estimator")
+    par_mod = importlib.import_module("repro.core.parallelize")
+
+    g = get_synth("synth_1k")
+    from repro.core.fusion import fuse_tasks
+    fuse_tasks(g)
+    sched = lower_to_structural(g)
+    regions = dse_regions(sched)
+
+    calls = []
+    real_init = EstimateContext.__init__
+
+    def counting_init(self, s):
+        calls.append(s)
+        real_init(self, s)
+
+    monkeypatch.setattr(est_mod.EstimateContext, "__init__", counting_init)
+    assert par_mod.EstimateContext is est_mod.EstimateContext
+    t0 = time.perf_counter()
+    assignment, cost = best_uniform(sched, MESH, regions=regions)
+    dt = time.perf_counter() - t0
+    assert cost.total_s > 0
+    assert len(calls) == 1, (f"best_uniform built {len(calls)} "
+                             "EstimateContexts; the hoist guarantees 1")
+    # Timing regression: the floor rung stays interactive on 1k+-node
+    # schedules.  Pre-hoist, every estimate() call rebuilt the context —
+    # an O(nodes) topology revalidation *per buffer* — putting this same
+    # call in the minutes; the bound is loose against CI noise but tight
+    # against any reintroduced per-call rebuild.
+    assert dt < 15.0, f"best_uniform took {dt:.2f}s on synth_1k"
