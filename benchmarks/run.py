@@ -14,6 +14,11 @@ Prints ``name,us_per_call,derived`` CSV.  Suites:
   ``python -m benchmarks.bench_compile_time --compare
   BENCH_compile_time.json`` to use it as a CI gate that exits nonzero on
   a >2× wall-time (or any QoR) regression against the committed baseline.
+* ``serve``           — serving path: continuous-batching vs static-wave
+  throughput + plan-cache tiers (cold/warm DSE wall, hit fetch time) on
+  every zoo config; emits ``BENCH_serve.json`` with its own
+  ``--compare`` gate (``python -m benchmarks.bench_serve --compare
+  BENCH_serve.json``).
 
 ``python -m benchmarks.run [--suite NAME] [--fast]``
 """
@@ -53,7 +58,7 @@ def main() -> None:
     ap.add_argument("--suite", default="all",
                     choices=("all", "case_study", "polybench", "models",
                              "ablation_iaca", "ablation_scale", "roofline",
-                             "train_smoke", "compile_time"))
+                             "train_smoke", "compile_time", "serve"))
     ap.add_argument("--fast", action="store_true",
                     help="skip the slower model-zoo arms")
     args = ap.parse_args()
@@ -86,6 +91,9 @@ def main() -> None:
         bench_train_smoke(report)
     if want("compile_time"):
         from .bench_compile_time import run as r
+        r(report, fast=args.fast)
+    if want("serve"):
+        from .bench_serve import run as r
         r(report, fast=args.fast)
     print(f"# {len(report.rows)} benchmark rows", file=sys.stderr)
 

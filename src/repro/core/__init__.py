@@ -16,12 +16,16 @@ from .lower import fallback_schedule, lower_to_structural
 from .multi_producer import eliminate_multi_producers
 from .optimize import Degradation, OptimizeReport, optimize
 from .parallelize import (RegionEntry, RegionSummary, best_uniform,
-                          parallelize)
-from .plan import ShardingPlan, build_plan, project_rules, replicated_plan
+                          canonical_snapshot, parallelize)
+from .plan import (PLAN_FORMAT_VERSION, ShardingPlan, build_plan,
+                   project_rules, replicated_plan)
+from .plan_cache import (CachedPlan, PlanCache, PlanKey, config_fingerprint,
+                         fetch_or_optimize, shape_bucket)
 from .rewrite import (GraphRewriteSession, RegionSpec, RewriteError,
                       ScheduleRewriteSession, default_region_bounds,
                       dse_regions, region_index_bytes)
-from .verify import VerifyError, VerifyIssue, VerifyReport, verify
+from .verify import (VerifyError, VerifyIssue, VerifyReport, verify,
+                     verify_static)
 
 __all__ = [
     "AccessMap", "Buffer", "Graph", "GraphTopology", "MemoryEffect", "Node",
@@ -39,7 +43,10 @@ __all__ = [
     "RegionSpec", "dse_regions", "RegionSummary", "RegionEntry",
     "default_region_bounds", "region_index_bytes",
     "SYNTH_CONFIGS", "SynthSpec", "build_synth_graph", "get_synth",
-    "verify", "VerifyReport", "VerifyIssue", "VerifyError",
+    "verify", "verify_static", "VerifyReport", "VerifyIssue", "VerifyError",
     "inject_faults", "fault_point", "active_injector", "FaultInjector",
     "InjectedFault",
+    "PlanKey", "PlanCache", "CachedPlan", "config_fingerprint",
+    "shape_bucket", "fetch_or_optimize", "canonical_snapshot",
+    "PLAN_FORMAT_VERSION",
 ]

@@ -43,6 +43,8 @@ site                 location
 ``plan.build``       ``build_plan`` entry
 ``plan.project``     per-buffer projection in ``project_rules``
 ``plan.delta``       ``ShardingPlan.apply_rule_change`` entry
+``cache.load``       per disk read in ``PlanCache.get`` (plan cache)
+``cache.store``      per disk write in ``PlanCache.put`` (plan cache)
 ===================  =====================================================
 
 Sites accept :mod:`fnmatch` patterns, so a sweep can target one pass

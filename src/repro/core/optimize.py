@@ -37,6 +37,7 @@ from .construct import construct_functional
 from .estimator import MeshSpec, ScheduleCost, estimate
 from .faults import active_injector
 from .fusion import FusionStats, fuse_tasks
+from .incremental import Snapshot
 from .ir import Graph, Schedule, topology_index_bytes
 from .lower import fallback_schedule, lower_to_structural
 from .multi_producer import MultiProducerStats, eliminate_multi_producers
@@ -142,7 +143,9 @@ def optimize(graph: Graph, mesh: MeshSpec, *,
              sweep_workers: int | None = None,
              seed_uniform: bool | None = None,
              budget_s: float | None = None,
-             dse_mode: str = "hierarchical"
+             dse_mode: str = "hierarchical",
+             warm_start: Snapshot | None = None,
+             warm_entries: list[Snapshot] | None = None
              ) -> tuple[Schedule, ShardingPlan, OptimizeReport]:
     """Run the five-step HIDA-OPT pipeline and derive the sharding plan.
 
@@ -179,6 +182,13 @@ def optimize(graph: Graph, mesh: MeshSpec, *,
             :func:`repro.core.parallelize.parallelize`.  The flat beam
             is the differential-testing oracle; both modes share every
             rung of the degradation ladder.
+        warm_start: cached whole-schedule assignment snapshot to seed
+            the DSE from (plan-cache nearest-neighbour warm start); the
+            beam phase is skipped — see
+            :func:`repro.core.parallelize.parallelize`.  All degradation
+            rungs still apply.
+        warm_entries: extra assignment fragments (donor region
+            summaries) tried as alternatives on the warm path.
 
     Returns:
         ``(schedule, plan, report)``: the parallelized Structural
@@ -245,6 +255,7 @@ def optimize(graph: Graph, mesh: MeshSpec, *,
             beam_width=beam_width, joint_radius=joint_radius,
             sweep_workers=sweep_workers, deadline=deadline,
             dse_mode=dse_mode,
+            warm_start=warm_start, warm_entries=warm_entries,
             # Joint uniform moves are a CA concept: keep the legacy escape
             # hatch suppressed in the CA-off ablation arm, as before.
             seed_uniform=(seed_uniform if ca or seed_uniform is None

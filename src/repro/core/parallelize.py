@@ -87,6 +87,7 @@ from __future__ import annotations
 
 import itertools
 import math
+import re
 import time
 import warnings
 from concurrent.futures import ThreadPoolExecutor
@@ -291,6 +292,77 @@ def _apply(node: Node, proposal: dict[str, tuple[str, ...]],
     node.unroll = {
         d: math.prod(mesh.size(a) for a in axes)
         for d, axes in proposal.items()}
+
+
+def canonical_node_key(index: int, name: str) -> str:
+    """Process-independent node identity for cached assignments.
+
+    Raw node names carry a process-global counter (``task_26`` in one
+    build is ``task_59`` in the next), so a snapshot keyed by raw names
+    never matches a freshly constructed schedule.  The canonical key
+    strips the counter and pins the node's position in schedule order —
+    stable across processes for the same (config, shape) pipeline, and a
+    harmless miss (not a mis-seed) when structures diverge."""
+    return f"{re.sub(r'_[0-9]+$', '', name)}@{index}"
+
+
+def canonical_snapshot(sched: Schedule) -> Snapshot:
+    """The schedule's current assignment keyed by
+    :func:`canonical_node_key` — the form the plan cache persists and
+    :func:`parallelize` accepts as ``warm_start``/``warm_entries``."""
+    return {canonical_node_key(i, n.name): (dict(n.axis_map),
+                                            dict(n.unroll))
+            for i, n in enumerate(sched.nodes)}
+
+
+def _remap_warm(frag: Snapshot, canon: dict[str, str],
+                live: set[str]) -> Snapshot:
+    """Translate a cached fragment onto live node names: raw names that
+    still exist pass through, canonical keys map via ``canon``, anything
+    else is dropped (a miss, covered by the normal per-node DSE)."""
+    out: Snapshot = {}
+    for k, v in frag.items():
+        if k in live:
+            out[k] = v
+        elif k in canon:
+            out[canon[k]] = v
+    return out
+
+
+def _sanitize_warm(node: Node, axis_map: dict[str, tuple[str, ...]],
+                   pf_cap: int, mesh: MeshSpec
+                   ) -> dict[str, tuple[str, ...]]:
+    """Quantize a cached assignment fragment onto ``node`` under the
+    *current* mesh and IA budget: drop dims the node cannot shard, axes
+    the mesh does not have (or that another dim of this node already
+    took), non-divisible factors, and over-budget entries.  The warm-start
+    analogue of :func:`_uniform_proposal` — a seed from a different mesh
+    or shape bucket degrades to its legal subset instead of poisoning the
+    search with an illegal assignment."""
+    dims = _shardable_dims(node)
+    names = set(mesh.names)
+    prop: dict[str, tuple[str, ...]] = {}
+    total = 1
+    used: set[str] = set()
+    for d, axes in axis_map.items():
+        if d not in dims:
+            continue
+        keep = tuple(a for a in axes if a in names and a not in used)
+        if len(keep) != len(tuple(axes)):
+            # A partially-legal entry changes the factor; re-check below.
+            axes = keep
+        if not axes:
+            continue
+        f = math.prod(mesh.size(a) for a in axes)
+        if dims[d] % f:
+            continue
+        if not (d == "batch" or d.startswith("batch_")):
+            if total * f > pf_cap:
+                continue
+            total *= f
+        used.update(axes)
+        prop[d] = tuple(axes)
+    return prop
 
 
 # --------------------------------------------------------------------------
@@ -614,8 +686,13 @@ class ParallelizeResult:
     #: returned its best-so-far snapshot instead of running to fixpoint.
     budget_expired: bool = False
     #: which DSE actually ran: "flat" (the whole-schedule beam, also the
-    #: single-region / ablation path) or "hierarchical".
+    #: single-region / ablation path), "hierarchical", or "warm" (seeded
+    #: from a cached assignment, beam skipped).
     dse_mode: str = "flat"
+    #: True when a ``warm_start`` snapshot seeded the search.
+    warm: bool = False
+    #: nodes of the schedule covered by the (sanitized) warm seed.
+    warm_covered: int = 0
     #: number of regions the hierarchical DSE partitioned the schedule
     #: into (1 when the flat beam ran).
     regions: int = 1
@@ -638,7 +715,10 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
                 colored_sweeps: bool = True,
                 seed_uniform: bool | None = None,
                 deadline: float | None = None,
-                dse_mode: str = "hierarchical") -> ParallelizeResult:
+                dse_mode: str = "hierarchical",
+                warm_start: Snapshot | None = None,
+                warm_entries: list[Snapshot] | None = None
+                ) -> ParallelizeResult:
     """Paper Section 6.5 steps 1-4 over a Structural schedule (in place).
 
     Steps 1-3 follow the paper; step 4 runs the paper's greedy
@@ -700,6 +780,22 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
             flat QoR on every config).  Schedules the partitioner leaves
             whole (or the CA-off / ``beam_width<=1`` arms) always take
             the flat path, bit-identically to ``dse_mode="flat"``.
+        warm_start: estimator snapshot from a previous compile of a
+            *similar* config (nearest plan-cache entry).  Each covered
+            node is seeded with its cached assignment — quantized onto
+            the current mesh/shapes by :func:`_sanitize_warm` — instead
+            of a fresh greedy scan; uncovered nodes run the normal
+            per-node DSE.  The seed then converges by coordinate descent
+            and the beam phase is **skipped** (replaced by a cheap
+            uniform-family floor scan plus the ``warm_entries``
+            alternatives), so the warm wall is a fraction of the cold
+            wall.  QoR ≥ the *warm greedy* path by the monotonicity of
+            ``converge`` — the cache layer above only serves warm results
+            that also beat its recorded cold QoR.
+        warm_entries: optional extra assignment fragments (e.g. PR 7
+            ``RegionEntry`` summaries from the cached plan's regions)
+            tried as whole-schedule alternatives after convergence; the
+            best strict improvement wins.
     """
     if dse_mode not in ("hierarchical", "flat"):
         raise ValueError(f"unknown dse_mode {dse_mode!r}")
@@ -761,6 +857,13 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
         key=lambda n: (counts.get(n.name, 0), n.intensity()), reverse=True)
     res.order = [n.name for n in ordered]
     all_names = {n.name for n in sched.nodes}
+
+    if warm_start is not None:
+        canon = {canonical_node_key(i, n.name): n.name
+                 for i, n in enumerate(sched.nodes)}
+        warm_start = _remap_warm(warm_start, canon, all_names)
+        warm_entries = [_remap_warm(f, canon, all_names)
+                        for f in (warm_entries or [])] or None
 
     def rank_node(node: Node, done: set[str], k: int
                   ) -> tuple[list[tuple[tuple, dict, dict]], int, int]:
@@ -945,10 +1048,32 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
         # — greedy one-pass can lock attention into SP while the FFN picks TP,
         # paying a reshard at every boundary).
         done: set[str] = set()
-        for node in ordered:
-            dse_node(node, done)
-            done.add(node.name)
-        converge(set(all_names), max_sweeps=4, tag="greedy")
+        if warm_start is not None:
+            # Warm seeding: covered nodes take their cached assignment
+            # (sanitized onto this mesh — an empty map is still a
+            # deliberate cached choice, "replicated"), uncovered nodes
+            # run the normal constrained scan against the seeded state.
+            res.warm = True
+            res.dse_mode = "warm"
+            for node in ordered:
+                frag = warm_start.get(node.name)
+                if frag is not None:
+                    prop = _sanitize_warm(
+                        node, frag[0], res.pf[node.name], mesh)
+                    est.apply(node.name, prop)
+                    res.warm_covered += 1
+                else:
+                    dse_node(node, done)
+                done.add(node.name)
+            res.log.append(
+                f"warm seed: {res.warm_covered}/{len(ordered)} nodes "
+                f"covered by cached assignment")
+        else:
+            for node in ordered:
+                dse_node(node, done)
+                done.add(node.name)
+        converge(set(all_names), max_sweeps=4,
+                 tag="warm" if warm_start is not None else "greedy")
         greedy_snap = est.snapshot()
         greedy_key = (est.total_s, est.hbm_bytes_per_device)
         res.greedy_total_s = greedy_key[0]
@@ -979,6 +1104,60 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
             seen.discard(origin)
             return [n.name for n in ordered if n.name in seen]
 
+        # ---- warm finish: the beam is what makes cold DSE expensive, so
+        # the warm path replaces it with two cheap scans over already-
+        # enumerated families — (a) the warm_entries fragments (region
+        # summaries of the donor plan) as whole-schedule alternatives,
+        # (b) the uniform-assignment floor family — keeping strict
+        # improvements only.  Everything after the converged warm-greedy
+        # state runs inside an error boundary; the converged state is the
+        # guaranteed floor.
+        if warm_start is not None:
+            warm_key = (est.total_s, est.hbm_bytes_per_device)
+            warm_snap = est.snapshot()
+            res.greedy_total_s = warm_key[0]
+            best: list = [warm_key, warm_snap]
+            try:
+                for frag in (warm_entries or [])[:16]:
+                    est.restore(best[1])
+                    changed = 0
+                    for nm, (am, _ur) in frag.items():
+                        if nm not in all_names:
+                            continue
+                        node = sched.node(nm)
+                        prop = _sanitize_warm(node, am, res.pf[nm], mesh)
+                        if prop != node.axis_map:
+                            est.apply(nm, prop)
+                            changed += 1
+                    if not changed:
+                        continue
+                    key = (est.total_s, est.hbm_bytes_per_device)
+                    if key < best[0]:
+                        best[:] = [key, est.snapshot()]
+                for a in uniform_candidates():
+                    apply_uniform(a)
+                    key = (est.total_s, est.hbm_bytes_per_device)
+                    if key < best[0]:
+                        best[:] = [key, est.snapshot()]
+                est.restore(best[1])
+                if best[0] < warm_key:
+                    # An alternative won; one short re-converge around it
+                    # (restored if it somehow regresses).
+                    converge(set(all_names), max_sweeps=2,
+                             tag="warm-refine")
+                    k2 = (est.total_s, est.hbm_bytes_per_device)
+                    if best[0] < k2:
+                        est.restore(best[1])
+                    res.log.append(
+                        f"warm alt: {warm_key[0]*1e3:.3f} -> "
+                        f"{min(k2, best[0])[0]*1e3:.3f}ms")
+            except Exception as e:
+                res.degraded.append(
+                    f"warm finish failed ({type(e).__name__}: {e}); "
+                    "restored converged warm seed")
+                res.log.append(res.degraded[-1])
+                est.restore(warm_snap)
+
         # ---- beam phase: joint multi-node proposals, flat or two-level.
         # The whole phase — region partition, seeding, rounds, refinement
         # — runs inside one error boundary: the beam is an *optimization*
@@ -986,7 +1165,7 @@ def parallelize(sched: Schedule, mesh: MeshSpec, *,
         # dependency, so any failure inside it restores the best
         # fully-committed snapshot seen so far (at worst the greedy one)
         # and the compile proceeds.
-        if ca and beam_width > 1:
+        elif ca and beam_width > 1:
             # Best fully-committed (key, snapshot) seen anywhere in the
             # phase — the error boundary restores it on failure.
             safe: list = [greedy_key, greedy_snap]

@@ -36,6 +36,13 @@ logger = logging.getLogger(__name__)
 
 Axes = tuple[str, ...]
 
+#: Serialization format version written by :meth:`ShardingPlan.to_json`
+#: and required (exactly) by :meth:`ShardingPlan.from_json`.  Bump it
+#: whenever the JSON schema or the semantics of any field change — the
+#: persistent plan cache (:mod:`repro.core.plan_cache`) rejects entries
+#: whose version differs instead of misapplying a stale layout.
+PLAN_FORMAT_VERSION = 1
+
 
 @dataclass
 class ShardingPlan:
@@ -216,13 +223,48 @@ class ShardingPlan:
     # -- serialisation ----------------------------------------------------------
     def to_json(self) -> str:
         return json.dumps({
-            "mesh": list(self.mesh_spec.axes),
+            "version": PLAN_FORMAT_VERSION,
+            "mesh": [[a, int(s)] for a, s in self.mesh_spec.axes],
             "buffer_specs": {k: [list(a) for a in v]
                              for k, v in self.buffer_specs.items()},
             "rules": {k: list(v) for k, v in self.rules.items()},
             "fsdp": self.fsdp,
             "meta": self.meta,
-        }, indent=2, default=str)
+            # Role aliases are derivable from the "__"-prefixed names on a
+            # live plan, but a deserialized plan must re-project aliases
+            # through apply_rule_change without re-deriving, so the map is
+            # carried explicitly (round-trip exactness > redundancy).
+            "role_sources": dict(self.role_sources),
+            # sort_keys makes the serialization canonical: two plans with
+            # equal content serialize to the same bytes regardless of the
+            # insertion order their dicts were built in — the round trip
+            # from_json(to_json(p)).to_json() is bit-identical, and plan
+            # JSON is directly comparable/hashable by the cache layer.
+        }, indent=2, sort_keys=True, default=str)
+
+    @classmethod
+    def from_json(cls, text: str) -> "ShardingPlan":
+        """Exact inverse of :meth:`to_json`: the round trip
+        ``ShardingPlan.from_json(p.to_json()).to_json() == p.to_json()``
+        is bit-identical, including role aliases and ``meta``.
+
+        Raises ``ValueError`` when the serialized ``version`` is not
+        :data:`PLAN_FORMAT_VERSION` — a stale persisted plan must be
+        rejected (and re-derived), never silently misapplied."""
+        d = json.loads(text)
+        version = d.get("version")
+        if version != PLAN_FORMAT_VERSION:
+            raise ValueError(
+                f"plan format version {version!r} != supported "
+                f"{PLAN_FORMAT_VERSION}; stale entry must be re-derived")
+        return cls(
+            mesh_spec=MeshSpec(tuple((a, int(s)) for a, s in d["mesh"])),
+            buffer_specs={k: tuple(tuple(a) for a in v)
+                          for k, v in d["buffer_specs"].items()},
+            rules={k: tuple(v) for k, v in d["rules"].items()},
+            fsdp=bool(d["fsdp"]),
+            meta=d["meta"],
+            role_sources=dict(d.get("role_sources", {})))
 
 
 def replicated_plan(mesh_spec: MeshSpec, data_axes: Axes = ("pod", "data"),

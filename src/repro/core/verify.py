@@ -60,7 +60,7 @@ from .ir import Schedule, ScheduleTopology, topo_order_over
 from .plan import ShardingPlan, _projected_spec
 
 __all__ = ["VerifyIssue", "VerifyReport", "VerifyError", "verify",
-           "HBM_CAPACITY_BYTES"]
+           "verify_static", "HBM_CAPACITY_BYTES"]
 
 #: TPU v5e per-chip HBM (16 GiB).  The default fit check warns (rather
 #: than errors) above this — see the module docstring.
@@ -343,5 +343,93 @@ def verify(sched: Schedule, plan: ShardingPlan, mesh: MeshSpec, *,
 
     rep.stats.setdefault("nodes", len(sched.nodes))
     rep.stats.setdefault("buffers", len(sched.buffers))
+    rep.elapsed_s = time.perf_counter() - t0
+    return rep
+
+
+def verify_static(plan: ShardingPlan, mesh: MeshSpec) -> VerifyReport:
+    """Schedule-free legality check of a plan against a mesh — the
+    plan-cache *load* gate.
+
+    A cache hit must cost microseconds, so this checks every invariant
+    that the plan alone can witness: the plan was derived **for** this
+    mesh (``mesh-mismatch``), rules and buffer specs name only real mesh
+    axes without over-subscribing one (``axis-unknown``,
+    ``rule-capacity``), and role aliases mirror an existing source spec
+    (``alias-incoherent``).  Schedule-coupled families (topology, node
+    assignments, spec coherence/rank, HBM fit) need the live schedule
+    and already ran through the full :func:`verify` when the entry was
+    *stored* — the cache only persists plans whose store-time report was
+    clean.  Same never-crash contract as ``verify()``."""
+    t0 = time.perf_counter()
+    rep = VerifyReport()
+    names = set(mesh.names)
+
+    def issue(code: str, site: str, message: str,
+              severity: str = "error") -> None:
+        rep.issues.append(VerifyIssue(code, severity, site, message))
+
+    def guarded(check):
+        try:
+            check()
+        except Exception as e:
+            issue("verify-internal", check.__name__,
+                  f"checker crashed: {type(e).__name__}: {e}")
+
+    def check_mesh() -> None:
+        rep.checks += 1
+        if tuple(plan.mesh_spec.axes) != tuple(mesh.axes):
+            issue("mesh-mismatch", "mesh",
+                  f"plan derived for mesh {plan.mesh_spec.axes}, "
+                  f"requested {mesh.axes}")
+
+    def check_rules() -> None:
+        for dim, axes in plan.rules.items():
+            axes = _axes_of(axes)
+            rep.checks += 1
+            for a in axes:
+                if a not in names:
+                    issue("axis-unknown", dim,
+                          f"rule names unknown mesh axis {a!r}")
+            if len(set(axes)) != len(axes):
+                issue("rule-capacity", dim,
+                      f"rule {axes} assigns a mesh axis more than once")
+
+    def check_specs() -> None:
+        for bname, spec in plan.buffer_specs.items():
+            rep.checks += 1
+            seen: set[str] = set()
+            for axis_idx, entry in enumerate(spec):
+                for a in _axes_of(entry):
+                    if a not in names:
+                        issue("axis-unknown", bname,
+                              f"spec axis {axis_idx} names unknown mesh "
+                              f"axis {a!r}")
+                    elif a in seen:
+                        # The full verifier tolerates this (it skips the
+                        # duplicate when computing shard factors), so the
+                        # load gate must not reject what store-time
+                        # verify passed.
+                        issue("rule-capacity", bname,
+                              f"spec uses mesh axis {a!r} on two "
+                              "dimensions of one buffer",
+                              severity="warning")
+                    else:
+                        seen.add(a)
+
+    def check_aliases() -> None:
+        for role, source in plan.role_sources.items():
+            rep.checks += 1
+            if source not in plan.buffer_specs:
+                issue("alias-incoherent", role,
+                      f"alias source {source!r} has no spec")
+            elif plan.buffer_specs.get(role) != plan.buffer_specs[source]:
+                issue("alias-incoherent", role,
+                      f"alias spec {plan.buffer_specs.get(role)} != "
+                      f"source {source!r} spec")
+
+    for check in (check_mesh, check_rules, check_specs, check_aliases):
+        guarded(check)
+    rep.stats["static"] = True
     rep.elapsed_s = time.perf_counter() - t0
     return rep

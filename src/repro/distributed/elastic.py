@@ -78,6 +78,39 @@ def reshard_checkpoint(src_dir: str | Path, step: int, like: Any,
         mgr.save(step, full, blocking=True)
 
 
+def mesh_for_hosts(n_hosts: int, base: "MeshSpec" = None) -> "MeshSpec":
+    """The serving/compile mesh after an elastic rescale: the data axis
+    scales with the surviving host count, the model axis is untouched
+    (re-sharding weights across a *different model parallelism* is a
+    checkpoint rewrite, not an elastic event)."""
+    from ..core.estimator import SINGLE_POD, MeshSpec
+    base = base if base is not None else SINGLE_POD
+    axes = tuple((a, n_hosts if a in ("data", "pod") and i == 0 else s)
+                 for i, (a, s) in enumerate(base.axes))
+    return MeshSpec(axes)
+
+
+def replan_for_topology(cache, cfg, *, new_mesh, bucket: str,
+                        graph_factory, optimize_kwargs: dict | None = None):
+    """Re-plan after a host-count change — warm, not cold.
+
+    An elastic rescale (16→8 hosts after failures, back to 16 on
+    recovery) changes the mesh, so the old :class:`~repro.core.PlanKey`
+    misses.  Routing the miss through
+    :func:`~repro.core.fetch_or_optimize` means the cache's
+    :meth:`~repro.core.PlanCache.nearest` finds the *same-fingerprint*
+    entry from the previous topology (same config outranks same mesh in
+    donor scoring) and seeds the DSE from its assignment — the restarted
+    job pays a warm re-DSE, a fraction of the cold wall, and the new
+    plan is cached so the *next* rescale back to this topology is a
+    sub-ms hit.  Returns ``(plan, source, report)`` exactly like
+    :func:`~repro.core.fetch_or_optimize`."""
+    from ..core.plan_cache import PlanKey, fetch_or_optimize
+    key = PlanKey.make(cfg, new_mesh, bucket)
+    return fetch_or_optimize(cache, key, new_mesh, graph_factory,
+                             optimize_kwargs=optimize_kwargs)
+
+
 def scale_batch_schedule(global_batch: int, old_hosts: int,
                          new_hosts: int) -> dict:
     """Keep the *global* batch invariant across rescales (per-host batch

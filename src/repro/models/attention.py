@@ -23,7 +23,12 @@ _NEG = -1e30
 class KVCache(NamedTuple):
     k: jax.Array          # (B, S_max, KVH, Dh)  or MLA: (B, S_max, kv_lora+rope)
     v: Optional[jax.Array]
-    pos: jax.Array        # scalar int32: tokens already cached
+    #: tokens already cached.  Scalar int32 for lock-step decode (all
+    #: batch rows at one position — the training/smoke path), or a
+    #: per-slot ``(B,)`` int32 vector for the continuous-batching server,
+    #: where every slot advances independently.  The rank is static under
+    #: jit, so the two layouts trace to different (cached) programs.
+    pos: jax.Array
 
 
 # --------------------------------------------------------------------------
@@ -152,8 +157,16 @@ def causal_mask(Sq: int, Skv: int, window: int | None = None,
 
 def decode_mask(Skv: int, pos: jax.Array, window: int | None = None
                 ) -> jax.Array:
-    """(1,1,1,1,Skv) mask for single-token decode at position ``pos``."""
+    """Single-token decode mask at position ``pos``: ``(1,1,1,1,Skv)``
+    for scalar ``pos``, ``(B,1,1,1,Skv)`` for per-slot ``(B,)`` ``pos``
+    (each slot attends only to its own prefix, so stale cache rows from
+    a previous slot occupant are masked to exact-zero probability)."""
     kpos = jnp.arange(Skv)
+    if pos.ndim:
+        m = kpos[None, :] <= pos[:, None]
+        if window is not None:
+            m = m & (kpos[None, :] > pos[:, None] - window)
+        return m[:, None, None, None, :]
     m = kpos <= pos
     if window is not None:
         m = m & (kpos > pos - window)
@@ -189,10 +202,17 @@ def gqa_attention(x: jax.Array, p: dict, cfg: ArchConfig,
 
     new_cache = None
     if cache is not None:
-        k_all = jax.lax.dynamic_update_slice(
-            cache.k, k, (0, cache.pos, 0, 0))
-        v_all = jax.lax.dynamic_update_slice(
-            cache.v, v, (0, cache.pos, 0, 0))
+        if cache.pos.ndim:
+            # Per-slot decode (continuous batching): each row scatters
+            # its single new token at its own position.  S must be 1.
+            rows = jnp.arange(x.shape[0])
+            k_all = cache.k.at[rows, cache.pos].set(k[:, 0])
+            v_all = cache.v.at[rows, cache.pos].set(v[:, 0])
+        else:
+            k_all = jax.lax.dynamic_update_slice(
+                cache.k, k, (0, cache.pos, 0, 0))
+            v_all = jax.lax.dynamic_update_slice(
+                cache.v, v, (0, cache.pos, 0, 0))
         new_cache = KVCache(k_all, v_all, cache.pos + x.shape[1])
         mask = decode_mask(k_all.shape[1], cache.pos, cfg.attn_window)
         ctx = _sdpa(q, k_all, v_all, mask)
@@ -265,7 +285,11 @@ def mla_attention(x: jax.Array, p: dict, cfg: ArchConfig,
 
     new_cache = None
     if cache is not None:
-        lat = jax.lax.dynamic_update_slice(cache.k, ckv, (0, cache.pos, 0))
+        if cache.pos.ndim:
+            lat = cache.k.at[jnp.arange(B), cache.pos].set(ckv[:, 0])
+        else:
+            lat = jax.lax.dynamic_update_slice(cache.k, ckv,
+                                               (0, cache.pos, 0))
         new_cache = KVCache(lat, None, cache.pos + S)
         c_nope, c_pe = lat[..., :m.kv_lora], lat[..., m.kv_lora:]
         # Absorbed: q_lat[h] = q_nope[h] @ W_uk[h]  (B,S,H,kv_lora).
@@ -279,7 +303,9 @@ def mla_attention(x: jax.Array, p: dict, cfg: ArchConfig,
                                preferred_element_type=F32))
         scores = scores / math.sqrt(m.nope_dim + m.rope_dim)
         kpos = jnp.arange(lat.shape[1])[None, None, None, :]
-        scores = jnp.where(kpos <= cache.pos, scores, _NEG)
+        cpos = (cache.pos[:, None, None, None] if cache.pos.ndim
+                else cache.pos)
+        scores = jnp.where(kpos <= cpos, scores, _NEG)
         probs = jax.nn.softmax(scores, axis=-1)
         ctx_lat = jnp.einsum("bhst,btr->bshr", probs,
                              c_nope.astype(F32))

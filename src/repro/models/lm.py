@@ -314,16 +314,22 @@ class LM:
         return cross_entropy(logits, mtp_labels, z_loss=0.0)
 
     # -- serving -------------------------------------------------------------------
-    def init_caches(self, B: int, S_max: int, abstract: bool = False
-                    ) -> dict:
-        """Cache pytree (zeros) — shape source for dry-run input_specs."""
+    def init_caches(self, B: int, S_max: int, abstract: bool = False,
+                    vector_pos: bool = False) -> dict:
+        """Cache pytree (zeros) — shape source for dry-run input_specs.
+
+        ``vector_pos=True`` makes every attention cache position a
+        per-slot ``(B,)`` vector instead of a shared scalar — required by
+        the continuous-batching server, where slots sit at independent
+        positions (see :class:`repro.launch.scheduler.ContinuousBatcher`).
+        """
         cfg = self.cfg
         caches: dict = {}
         for gi, (pattern, repeats) in enumerate(self._groups()):
             g: dict = {}
             for j, (mix, ffn) in enumerate(pattern):
                 g[f"b{j}"] = self._block_cache(mix, B, S_max, repeats,
-                                               abstract)
+                                               abstract, vector_pos)
             caches[f"group{gi}"] = g
         return caches
 
@@ -370,8 +376,10 @@ class LM:
             out[f"group{gi}"] = g
         return out
 
-    def _block_cache(self, mix, B, S_max, repeats, abstract=False):
+    def _block_cache(self, mix, B, S_max, repeats, abstract=False,
+                     vector_pos=False):
         cfg = self.cfg
+        pos_shape = (B,) if vector_pos else ()
 
         def z(shape, dtype=BF16):
             full = (repeats,) + shape if repeats > 1 else shape
@@ -383,7 +391,7 @@ class LM:
             if cfg.mla is not None:
                 m = cfg.mla
                 return KVCache(z((B, S_max, m.kv_lora + m.rope_dim)), None,
-                               z((), jnp.int32))
+                               z(pos_shape, jnp.int32))
             KVH, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
             S_eff = min(S_max, cfg.attn_window or S_max)
             # SWA caches could be ring buffers of the window; we keep the
@@ -391,7 +399,7 @@ class LM:
             # the window bound is what makes the cell feasible.
             S_c = S_eff if (cfg.attn_window and S_max > 65536) else S_max
             return KVCache(z((B, S_c, KVH, Dh)), z((B, S_c, KVH, Dh)),
-                           z((), jnp.int32))
+                           z(pos_shape, jnp.int32))
         if mix == "mamba":
             mb = cfg.mamba
             Din = mb.expand * cfg.d_model
@@ -425,16 +433,48 @@ class LM:
 
     def decode_step(self, params, batch, caches) -> tuple[jax.Array, dict]:
         """One-token step: batch holds the current token (B,1) (or frame)
-        and the position scalar; caches as from init_caches/prefill."""
+        and the position — a scalar (lock-step batch) or a per-slot
+        ``(B,)`` vector (continuous batching; caches must then come from
+        ``init_caches(vector_pos=True)``).
+
+        ``batch["active"]`` (optional, ``(B,)`` bool) gates the cache
+        write-back per slot: an inactive slot's caches pass through
+        bit-identical to never stepping, so empty decode slots neither
+        advance their position nor pollute the cache a future occupant
+        will overwrite-and-mask.  Requires vector positions."""
         cfg = self.cfg
         if cfg.frontend == "audio_frames":
             B = batch["frames"].shape[0]
         else:
             B = batch["tokens"].shape[0]
         pos = batch["pos"]
-        positions = jnp.broadcast_to(pos, (B, 1))
+        positions = (pos[:, None] if pos.ndim
+                     else jnp.broadcast_to(pos, (B, 1)))
         resid, img = self._embed(params, batch)
         resid, _, new_caches = self._backbone(params, resid, positions,
                                               img, caches=caches)
+        if "active" in batch:
+            new_caches = self._gate_caches(batch["active"], caches,
+                                           new_caches)
         logits = self._head(params, resid)
         return logits, new_caches
+
+    def _gate_caches(self, active, old, new):
+        """Per-slot select between the stepped and the previous cache
+        leaves.  The batch axis of every leaf is 0, except inside a
+        stacked (scanned) layer group where the leading axis is the
+        layers axis — selection is applied per group so the broadcast
+        shape is always right."""
+        out: dict = {}
+        for gi, (_pattern, repeats) in enumerate(self._groups()):
+            ax = 1 if repeats > 1 else 0
+            B = active.shape[0]
+
+            def sel(o, n, ax=ax):
+                shape = [1] * n.ndim
+                shape[ax] = B
+                return jnp.where(active.reshape(shape), n, o)
+
+            g = f"group{gi}"
+            out[g] = jax.tree.map(sel, old[g], new[g])
+        return out

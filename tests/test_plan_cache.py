@@ -1,0 +1,287 @@
+"""Persistent plan cache + warm-started re-DSE.
+
+Contracts:
+
+1. **Round-trip** — a :class:`CachedPlan` survives JSON exactly (plan
+   payload, canonical snapshot, QoR), and the envelope version gate
+   rejects stale entries.
+2. **Tiers** — memory hit needs no I/O, disk hit survives a process
+   restart (fresh :class:`PlanCache` on the same root), and a hit is
+   served in well under the 5 ms budget.
+3. **Degradation** — corrupt files, version skew, and injected
+   ``cache.load`` / ``cache.store`` faults degrade to a miss (load) or
+   an unstored entry (store); :func:`fetch_or_optimize` then falls back
+   to the DSE and never raises.
+4. **Safety** — every cache-served plan passes the static verifier
+   against the requesting mesh; a mesh-mismatched entry is rejected,
+   not served.
+5. **Warm start** — a donor snapshot covers the fresh schedule's nodes
+   (canonical keys bridge the process-global name counter), warm wall
+   is below cold wall, warm QoR is never worse, and the elastic
+   topology rung (host-count change) replans warm with the new plan
+   cached for next time.
+"""
+import json
+import time
+
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.core import (MULTI_POD, SINGLE_POD, CachedPlan, PlanCache,
+                        PlanKey, build_lm_graph, canonical_snapshot,
+                        config_fingerprint, fetch_or_optimize, optimize,
+                        shape_bucket, verify_static)
+from repro.core.faults import inject_faults
+from repro.core.ir import reset_fresh_names
+from repro.core.plan_cache import CACHE_FORMAT_VERSION
+from repro.distributed import mesh_for_hosts, replan_for_topology
+
+ARCH = "smollm-135m"
+BUCKET = shape_bucket("decode", 128, 4)
+SHAPE = ShapeSpec(BUCKET, 128, 4, "decode")
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config(ARCH, smoke=True)
+
+
+@pytest.fixture(scope="module")
+def cold(cfg):
+    """One cold optimize shared by the module's tests."""
+    t0 = time.perf_counter()
+    sched, plan, report = optimize(build_lm_graph(cfg, SHAPE), SINGLE_POD)
+    wall = time.perf_counter() - t0
+    return sched, plan, report, wall
+
+
+def graph_factory(cfg):
+    return lambda: build_lm_graph(cfg, SHAPE)
+
+
+def make_entry(cfg, cold, mesh=SINGLE_POD) -> CachedPlan:
+    sched, plan, report, _ = cold
+    return CachedPlan(key=PlanKey.make(cfg, mesh, BUCKET), plan=plan,
+                      snapshot=canonical_snapshot(sched),
+                      qor_total_s=report.cost.total_s, stored_unix=1.0)
+
+
+# -- identity -------------------------------------------------------------
+
+def test_fingerprint_covers_every_field(cfg):
+    other = get_config("smollm-360m", smoke=True)
+    assert config_fingerprint(cfg) == config_fingerprint(cfg)
+    assert config_fingerprint(cfg) != config_fingerprint(other)
+
+
+def test_shape_bucket_quantizes():
+    assert shape_bucket("decode", 100, 4) == shape_bucket("decode", 128, 4)
+    assert shape_bucket("decode", 129, 4) == "decode_b4_s256"
+    assert shape_bucket("decode", 128, 8) != shape_bucket("decode", 128, 4)
+    assert shape_bucket("prefill", 128, 4) != shape_bucket("decode", 128, 4)
+
+
+def test_plan_key_roundtrip(cfg):
+    key = PlanKey.make(cfg, SINGLE_POD, BUCKET)
+    assert PlanKey.from_dict(key.to_dict()) == key
+    assert key.digest() == key.digest()
+    assert key.digest() != PlanKey.make(cfg, MULTI_POD, BUCKET).digest()
+
+
+# -- round-trip -----------------------------------------------------------
+
+def test_entry_json_roundtrip(cfg, cold):
+    entry = make_entry(cfg, cold)
+    back = CachedPlan.from_json(entry.to_json())
+    assert back.key == entry.key
+    assert back.snapshot == entry.snapshot
+    assert back.qor_total_s == entry.qor_total_s
+    assert back.plan.to_json() == entry.plan.to_json()
+
+
+def test_entry_version_gate(cfg, cold):
+    blob = json.loads(make_entry(cfg, cold).to_json())
+    blob["cache_version"] = CACHE_FORMAT_VERSION + 1
+    with pytest.raises(ValueError, match="version"):
+        CachedPlan.from_json(json.dumps(blob))
+
+
+# -- tiers ----------------------------------------------------------------
+
+def test_memory_then_disk_hit(cfg, cold, tmp_path):
+    entry = make_entry(cfg, cold)
+    cache = PlanCache(tmp_path)
+    assert cache.put(entry)
+    assert cache.get(entry.key) is entry          # memory tier
+    assert cache.stats["hits_mem"] == 1
+
+    fresh = PlanCache(tmp_path)                   # "restarted process"
+    t0 = time.perf_counter()
+    got, rep = fresh.fetch(entry.key, SINGLE_POD)
+    fetch_s = time.perf_counter() - t0
+    assert got is not None and rep.ok
+    assert fresh.stats["hits_disk"] == 1
+    assert got.plan.to_json() == entry.plan.to_json()
+    assert fetch_s < 0.005, f"disk hit took {fetch_s * 1e3:.2f} ms"
+
+
+def test_lru_eviction_keeps_disk(cfg, cold, tmp_path):
+    cache = PlanCache(tmp_path, capacity=1)
+    a = make_entry(cfg, cold, SINGLE_POD)
+    b = make_entry(cfg, cold, MULTI_POD)
+    cache.put(a)
+    cache.put(b)                                  # evicts a from memory
+    assert a.key not in cache._lru
+    assert cache.get(a.key) is not None           # but disk still has it
+    assert cache.stats["hits_disk"] == 1
+
+
+# -- degradation ----------------------------------------------------------
+
+def test_corrupt_file_is_a_miss(cfg, cold, tmp_path):
+    entry = make_entry(cfg, cold)
+    cache = PlanCache(tmp_path)
+    cache.put(entry)
+    path = cache._path(entry.key)
+    path.write_text(path.read_text()[:40])        # truncate mid-JSON
+    fresh = PlanCache(tmp_path)
+    assert fresh.get(entry.key) is None
+    assert fresh.stats["corrupt"] == 1 and fresh.stats["misses"] == 1
+
+
+def test_wrong_key_in_file_is_a_miss(cfg, cold, tmp_path):
+    entry = make_entry(cfg, cold, SINGLE_POD)
+    other = make_entry(cfg, cold, MULTI_POD)
+    cache = PlanCache(tmp_path)
+    cache.put(entry)
+    # overwrite entry's file with other's payload: digest/key mismatch
+    cache._path(entry.key).write_text(other.to_json())
+    fresh = PlanCache(tmp_path)
+    assert fresh.get(entry.key) is None
+    assert fresh.stats["corrupt"] == 1
+
+
+def test_chaos_cache_sites_never_raise(cfg, cold, tmp_path):
+    entry = make_entry(cfg, cold)
+    cache = PlanCache(tmp_path)
+    with inject_faults(seed=0, rate=1.0, sites=("cache.*",)) as inj:
+        assert cache.put(entry) is False          # store degraded
+        cache._lru.clear()
+        assert cache.get(entry.key) is None       # load degraded
+    assert cache.stats["store_errors"] == 1
+    assert {r.site for r in inj.fired()} <= {"cache.load", "cache.store"}
+
+
+def test_fetch_or_optimize_survives_chaos(cfg, tmp_path):
+    cache = PlanCache(tmp_path)
+    with inject_faults(seed=0, rate=1.0, sites=("cache.*",)):
+        plan, source, report = fetch_or_optimize(
+            cache, PlanKey.make(cfg, SINGLE_POD, BUCKET), SINGLE_POD,
+            graph_factory(cfg))
+    assert source == "cold" and report.verify.ok
+    assert verify_static(plan, SINGLE_POD).ok
+
+
+# -- safety ---------------------------------------------------------------
+
+def test_mesh_mismatched_entry_rejected(cfg, cold, tmp_path):
+    sched, plan, report, _ = cold                 # plan derived on SINGLE_POD
+    bad = CachedPlan(key=PlanKey.make(cfg, MULTI_POD, BUCKET), plan=plan,
+                     snapshot=canonical_snapshot(sched),
+                     qor_total_s=report.cost.total_s)
+    cache = PlanCache(tmp_path)
+    cache.put(bad)
+    got, rep = cache.fetch(bad.key, MULTI_POD)
+    assert got is None and not rep.ok
+    assert "mesh-mismatch" in rep.codes()
+    assert cache.stats["rejected"] == 1
+
+
+def test_cache_loaded_plans_verify(cfg, cold, tmp_path):
+    cache = PlanCache(tmp_path)
+    cache.put(make_entry(cfg, cold))
+    fresh = PlanCache(tmp_path)
+    got, rep = fresh.fetch(make_entry(cfg, cold).key, SINGLE_POD)
+    assert got is not None and rep.ok and not rep.errors()
+
+
+# -- warm start -----------------------------------------------------------
+
+def test_hit_warm_cold_progression(cfg, cold, tmp_path):
+    _, _, _, cold_wall = cold
+    cache = PlanCache(tmp_path)
+    key = PlanKey.make(cfg, SINGLE_POD, BUCKET)
+
+    plan1, s1, rep1 = fetch_or_optimize(cache, key, SINGLE_POD,
+                                        graph_factory(cfg))
+    assert s1 == "cold" and rep1.verify.ok
+
+    # same key again: pure hit, no DSE
+    plan2, s2, rep2 = fetch_or_optimize(cache, key, SINGLE_POD,
+                                        graph_factory(cfg))
+    assert s2 == "hit" and rep2 is None
+    assert plan2.to_json() == plan1.to_json()
+
+    # different bucket, same config: warm re-DSE seeded by the donor
+    key3 = PlanKey.make(cfg, SINGLE_POD, shape_bucket("decode", 256, 4))
+    t0 = time.perf_counter()
+    plan3, s3, rep3 = fetch_or_optimize(
+        cache, key3, SINGLE_POD,
+        lambda: build_lm_graph(cfg, ShapeSpec("d256", 256, 4, "decode")))
+    warm_wall = time.perf_counter() - t0
+    assert s3 == "warm" and rep3.verify.ok
+    assert rep3.parallelize.warm_covered > 0
+    assert warm_wall < cold_wall, (warm_wall, cold_wall)
+
+
+def test_warm_qor_never_worse_and_deterministic(cfg, cold):
+    sched, _, report, _ = cold
+    snap = canonical_snapshot(sched)
+    # pin the process-global fresh-name counter so the two runs produce
+    # identically-named (not merely isomorphic) schedules
+    reset_fresh_names()
+    _, wplan1, wrep1 = optimize(build_lm_graph(cfg, SHAPE), SINGLE_POD,
+                                warm_start=snap)
+    reset_fresh_names()
+    _, wplan2, wrep2 = optimize(build_lm_graph(cfg, SHAPE), SINGLE_POD,
+                                warm_start=snap)
+    assert wrep1.parallelize.warm and wrep1.parallelize.warm_covered > 0
+    assert wrep1.cost.total_s <= report.cost.total_s * (1 + 1e-9)
+    assert wplan1.to_json() == wplan2.to_json()   # deterministic
+    assert not wrep1.degradations
+
+
+def test_nearest_prefers_same_fingerprint(cfg, cold, tmp_path):
+    other = get_config("smollm-360m", smoke=True)
+    cache = PlanCache(tmp_path)
+    # donor A: same config, different mesh;  donor B: different config,
+    # same mesh+bucket.  A must win (fingerprint outranks mesh+bucket).
+    cache.put(make_entry(cfg, cold, MULTI_POD))
+    sched_b, plan_b, rep_b = optimize(
+        build_lm_graph(other, SHAPE), SINGLE_POD)
+    cache.put(CachedPlan(key=PlanKey.make(other, SINGLE_POD, BUCKET),
+                         plan=plan_b, snapshot=canonical_snapshot(sched_b),
+                         qor_total_s=rep_b.cost.total_s))
+    donor = cache.nearest(PlanKey.make(cfg, SINGLE_POD, BUCKET))
+    assert donor is not None
+    assert donor.key.fingerprint == config_fingerprint(cfg)
+
+
+def test_elastic_topology_rung(cfg, tmp_path):
+    cache = PlanCache(tmp_path)
+    gf = graph_factory(cfg)
+    m16, m8 = mesh_for_hosts(16), mesh_for_hosts(8)
+    assert m16 == SINGLE_POD
+    _, s0, _ = fetch_or_optimize(cache, PlanKey.make(cfg, m16, BUCKET),
+                                 m16, gf)
+    assert s0 == "cold"
+    plan8, s8, rep8 = replan_for_topology(cache, cfg, new_mesh=m8,
+                                          bucket=BUCKET, graph_factory=gf)
+    assert s8 == "warm" and rep8.verify.ok
+    assert rep8.parallelize.warm_covered > 0
+    assert verify_static(plan8, m8).ok
+    # growing back is now a sub-ms hit, not a re-plan
+    _, s16, rep16 = replan_for_topology(cache, cfg, new_mesh=m16,
+                                        bucket=BUCKET, graph_factory=gf)
+    assert s16 == "hit" and rep16 is None

@@ -22,10 +22,12 @@ def test_train_loss_decreases_end_to_end(tmp_path):
 
 def test_serve_generates_tokens():
     from repro.launch.serve import main as serve_main
-    out = serve_main(["--arch", "smollm-135m", "--smoke", "--batch", "2",
-                      "--prompt-len", "8", "--gen", "4"])
-    assert out["tokens"].shape == (2, 4)
-    assert out["tok_per_s"] > 0
+    out = serve_main(["--arch", "smollm-135m", "--smoke", "--slots", "2",
+                      "--requests", "2", "--prompt-len-range", "8", "8",
+                      "--gen-range", "4", "4", "--no-plan"])
+    c = out["continuous"]
+    assert c["requests"] == 2 and c["generated"] == 2 * 4
+    assert c["tok_per_s"] > 0
 
 
 def test_plan_roundtrips_json():
