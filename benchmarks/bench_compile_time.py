@@ -41,8 +41,9 @@ phase's Δ-maintained pair heap over the session's reachability index is
 the dominant pre-DSE win, and a regression there must not hide under the
 pre-DSE noise floor), or the exit-verifier time ``verify_s`` (the
 plan-legality check of ``repro.core.verify`` runs on every ``optimize()``
-return and must stay in the low milliseconds) — exceeds ``threshold ×``
-the committed baseline
+return and must stay in the low milliseconds), or the exit-analyzer time
+``analyze_s`` (the static hazard lint of ``repro.core.analyze``, same
+every-compile contract) — exceeds ``threshold ×`` the committed baseline
 (arms faster than ``--min-delta-s`` absolute growth are ignored — the
 PolyBench arms run in single-digit milliseconds and would otherwise gate
 on scheduler noise; the pre-DSE and fuse checks have their own
@@ -71,7 +72,7 @@ import time
 from pathlib import Path
 
 from repro.configs import SHAPES, get_config
-from repro.core import SINGLE_POD, build_lm_graph, optimize
+from repro.core import SINGLE_POD, analyze, build_lm_graph, optimize
 from repro.core.generate import get_synth
 
 from .common import POLYBENCH
@@ -88,6 +89,16 @@ def _time_optimize(graph_builder, training: bool) -> dict:
     t0 = time.perf_counter()
     sched, _plan, rep = optimize(g, SINGLE_POD, training=training)
     dt = time.perf_counter() - t0
+    # The in-pipeline rep.analyze_s rides on whatever GC pressure the
+    # previous arms left behind (the invariant rule's from-scratch
+    # rebuild allocates enough to trigger gen-2 scans over the whole
+    # heap — 2-3x jitter on the synth arms).  Re-measure best-of-3 on
+    # the idle analyzer so --compare gates the analyzer, not the heap.
+    analyze_s = rep.analyze_s
+    for _ in range(3):
+        t1 = time.perf_counter()
+        analyze(sched, _plan, SINGLE_POD)
+        analyze_s = min(analyze_s, time.perf_counter() - t1)
     return {
         "wall_s": dt,
         "plan_s": rep.plan_time_s,
@@ -104,6 +115,9 @@ def _time_optimize(graph_builder, training: bool) -> dict:
         # Exit plan-legality verification (repro.core.verify) — runs on
         # every optimize() return, so it gates in --compare like fuse_s.
         "verify_s": rep.verify_s,
+        # Exit static hazard analysis (repro.core.analyze) — same
+        # every-compile contract as verify_s, gated the same way.
+        "analyze_s": analyze_s,
         "nodes": len(sched.nodes),
         "evaluated": rep.parallelize.evaluated,
         "rejected_constraint": rep.parallelize.rejected_constraint,
@@ -186,6 +200,13 @@ FUSE_MIN_DELTA_S = 0.02
 #: future check family that makes verification a per-compile tax.
 VERIFY_MIN_DELTA_S = 0.02
 
+#: absolute growth below this many seconds never gates the analyze_s
+#: check.  The exit hazard analyzer runs well under 10 ms on every
+#: model/PolyBench arm (the synth arms pay the invariant family's
+#: from-scratch topology rebuild, tens of ms); same role as
+#: VERIFY_MIN_DELTA_S — a new rule must not become a per-compile tax.
+ANALYZE_MIN_DELTA_S = 0.02
+
 #: absolute growth below this many bytes never gates the index_bytes
 #: check (the small model/PolyBench arms hold a few KB of index; a 2x
 #: ratio there is noise-of-representation, not a leak).  64 KiB of real
@@ -227,6 +248,11 @@ def compare(results: dict, baseline: dict, threshold: float,
             ver = (f", verify {old['verify_s']*1e3:.2f}ms -> "
                    if "verify_s" in old else ", verify ") \
                   + f"{new['verify_s']*1e3:.2f}ms"
+        ana = ""
+        if "analyze_s" in new:
+            ana = (f", analyze {old['analyze_s']*1e3:.2f}ms -> "
+                   if "analyze_s" in old else ", analyze ") \
+                  + f"{new['analyze_s']*1e3:.2f}ms"
         dse = ""
         if "regions" in new:
             dse = (f", dse r={new['regions']} "
@@ -234,7 +260,7 @@ def compare(results: dict, baseline: dict, threshold: float,
                    f"outer {new['outer_dse_s']*1e3:.1f}ms")
         print(f"{arm}: wall {old['wall_s']:.3f}s -> {new['wall_s']:.3f}s "
               f"({ratio:.2f}x), qor {old['total_s']*1e3:.3f}ms -> "
-              f"{new['total_s']*1e3:.3f}ms{plan}{pre}{fuse}{ver}{dse}")
+              f"{new['total_s']*1e3:.3f}ms{plan}{pre}{fuse}{ver}{ana}{dse}")
         if (ratio > threshold
                 and new["wall_s"] - old["wall_s"] > min_delta_s):
             failures.append(
@@ -280,6 +306,19 @@ def compare(results: dict, baseline: dict, threshold: float,
                     f"is {ver_ratio:.2f}x the baseline "
                     f"{old['verify_s']*1e3:.2f}ms (threshold "
                     f"{threshold:.2f}x)")
+        # analyze_s gates like verify_s: the hazard lint runs on every
+        # compile, so a rule that grows past O(schedule) shows up here.
+        if "analyze_s" in new and "analyze_s" in old:
+            ana_ratio = (new["analyze_s"] / old["analyze_s"]
+                         if old["analyze_s"] else float("inf"))
+            if (ana_ratio > threshold
+                    and new["analyze_s"] - old["analyze_s"]
+                    > ANALYZE_MIN_DELTA_S):
+                failures.append(
+                    f"{arm}: exit-analyze time "
+                    f"{new['analyze_s']*1e3:.2f}ms is {ana_ratio:.2f}x "
+                    f"the baseline {old['analyze_s']*1e3:.2f}ms "
+                    f"(threshold {threshold:.2f}x)")
         # Peak index memory gates like wall time: the blocked closure
         # rows and topology caches must stay O(edges), and a
         # representation regression (say, rows going dense again) shows

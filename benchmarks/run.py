@@ -19,6 +19,12 @@ Prints ``name,us_per_call,derived`` CSV.  Suites:
   every zoo config; emits ``BENCH_serve.json`` with its own
   ``--compare`` gate (``python -m benchmarks.bench_serve --compare
   BENCH_serve.json``).
+* ``lint``            — the ``python -m repro.lint`` hazard sweep over
+  every config + ``synth_1k`` (static dataflow analysis:
+  deadlock/FIFO-depth, shard races, write ordering, index invariants),
+  plus a ``ruff check`` row when ruff is installed (skipped otherwise —
+  the config lives in ``ruff.toml``).  Per-arm ``analyze_s`` is gated
+  by ``bench_compile_time --compare`` like ``verify_s``.
 
 ``python -m benchmarks.run [--suite NAME] [--fast]``
 """
@@ -53,12 +59,45 @@ def bench_train_smoke(report) -> None:
                        f"final_loss={out['final_loss']:.3f}")
 
 
+def bench_lint(report, fast: bool = False) -> None:
+    """Hazard-lint every config (the CI lane `python -m repro.lint`
+    drives the same code); nonzero findings land in the derived column
+    rather than aborting the suite.  Ruff is optional tooling — absent
+    in the pinned image — so its row degrades to a skip note."""
+    import shutil
+    import subprocess
+
+    from repro.configs import list_archs
+    from repro.lint import lint_one
+
+    targets = (list_archs()[:3] if fast else list_archs()) + ["synth_1k"]
+    for name in targets:
+        res = lint_one(name)
+        report.add(f"lint/{name}", us_per_call=res["wall_s"] * 1e6,
+                   derived=f"ok={res['ok']}|errors={len(res['errors'])}"
+                           f"|warnings={len(res['warnings'])}"
+                           f"|checks={res['checks']}"
+                           f"|analyze_ms={res['analyze_s'] * 1e3:.3f}")
+    ruff = shutil.which("ruff")
+    if ruff is None:
+        report.add("lint/ruff", 0.0,
+                   derived="skipped (ruff not installed; see ruff.toml)")
+    else:
+        t0 = time.perf_counter()
+        proc = subprocess.run([ruff, "check", "src", "tests", "benchmarks"],
+                              capture_output=True, text=True)
+        report.add("lint/ruff",
+                   us_per_call=(time.perf_counter() - t0) * 1e6,
+                   derived=f"rc={proc.returncode}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
                     choices=("all", "case_study", "polybench", "models",
                              "ablation_iaca", "ablation_scale", "roofline",
-                             "train_smoke", "compile_time", "serve"))
+                             "train_smoke", "compile_time", "serve",
+                             "lint"))
     ap.add_argument("--fast", action="store_true",
                     help="skip the slower model-zoo arms")
     args = ap.parse_args()
@@ -95,6 +134,8 @@ def main() -> None:
     if want("serve"):
         from .bench_serve import run as r
         r(report, fast=args.fast)
+    if want("lint"):
+        bench_lint(report, fast=args.fast)
     print(f"# {len(report.rows)} benchmark rows", file=sys.stderr)
 
 

@@ -1,5 +1,7 @@
 """HIDA core: hierarchical dataflow IR + optimizer (the paper's
 contribution, re-targeted to TPU meshes)."""
+from .analyze import (AnalysisIssue, AnalysisRule, AnalyzeReport, analyze,
+                      analyze_plan, register_rule, registered_rules)
 from .balance import balance_paths
 from .construct import construct_functional
 from .estimator import (MULTI_POD, SINGLE_POD, MeshSpec, estimate,
@@ -44,6 +46,8 @@ __all__ = [
     "default_region_bounds", "region_index_bytes",
     "SYNTH_CONFIGS", "SynthSpec", "build_synth_graph", "get_synth",
     "verify", "verify_static", "VerifyReport", "VerifyIssue", "VerifyError",
+    "analyze", "analyze_plan", "AnalyzeReport", "AnalysisIssue",
+    "AnalysisRule", "register_rule", "registered_rules",
     "inject_faults", "fault_point", "active_injector", "FaultInjector",
     "InjectedFault",
     "PlanKey", "PlanCache", "CachedPlan", "config_fingerprint",

@@ -104,7 +104,14 @@ def _soft_fifo(rs: ScheduleRewriteSession, src: str, dst: str,
                bname: str, skew: int, stats: BalanceStats) -> None:
     """Fig. 8(c): rotate access into an external soft FIFO, ordering kept
     by explicit tokens (elastic node execution)."""
-    rs.set_buffer_attrs(bname, stages=skew + 1, placement="external")
+    # One buffer can carry several skewed edges (a fan-out feeding
+    # consumers at different depths); the FIFO must be as deep as the
+    # *deepest* edge demands.  The edges iterate in name order, not skew
+    # order, so a later smaller-skew edge must not shrink stages below
+    # an earlier edge's skew+1 requirement.
+    cur = rs.sched.buffers[bname].stages
+    rs.set_buffer_attrs(bname, stages=max(cur, skew + 1),
+                        placement="external")
     rs.add_token(src, dst)
     stats.soft_fifos += 1
     stats.log.append(

@@ -45,6 +45,7 @@ site                 location
 ``plan.delta``       ``ShardingPlan.apply_rule_change`` entry
 ``cache.load``       per disk read in ``PlanCache.get`` (plan cache)
 ``cache.store``      per disk write in ``PlanCache.put`` (plan cache)
+``analyze.rules``    per analysis rule in ``analyze()`` (hazard lint)
 ===================  =====================================================
 
 Sites accept :mod:`fnmatch` patterns, so a sweep can target one pass

@@ -889,6 +889,15 @@ class Schedule:
         order, matching ``producers_of``/``consumers_of``)."""
         return list(self.topology().edges)
 
+    def happens_before_edges(self) -> list[tuple[str, str, str]]:
+        """Dataflow edges plus token edges (buffer slot ``"<token>"``) —
+        the happens-before relation the static hazard analyzer
+        (:mod:`repro.core.analyze`) walks for write-ordering and cycle
+        checks.  Token edges are ordering-only (Section 6.4.2), so they
+        extend reachability without adding data traffic."""
+        return self.edges() + [(t.src, t.dst, "<token>")
+                               for t in self.tokens]
+
     def topo_order(self) -> list[Node]:
         """Topological order over buffer edges (stable; raises on cycles
         between distinct nodes, ignoring self-loops from RW args).

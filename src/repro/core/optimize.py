@@ -32,6 +32,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 
+from .analyze import AnalyzeReport, analyze
 from .balance import BalanceStats, balance_paths
 from .construct import construct_functional
 from .estimator import MeshSpec, ScheduleCost, estimate
@@ -101,6 +102,10 @@ class OptimizeReport:
     #: wall time of the exit legality check (verify + any repair rungs);
     #: benchmarks/bench_compile_time gates it staying ≪ pre_dse_s.
     verify_s: float = 0.0
+    #: wall time of the exit static hazard analysis
+    #: (:func:`repro.core.analyze.analyze`) — gated by
+    #: benchmarks/bench_compile_time like ``verify_s``.
+    analyze_s: float = 0.0
     #: per-level DSE wall time (hierarchical mode: inner = per-region
     #: searches, outer = inter-region composition; both 0.0 on the flat
     #: path) and the number of regions the schedule was partitioned into
@@ -122,6 +127,13 @@ class OptimizeReport:
     #: plan (post-repair; ``ok`` unless even the ladder's bottom rung
     #: could not produce a legal plan, e.g. a genuinely cyclic graph).
     verify: VerifyReport | None = None
+    #: the exit :class:`~repro.core.analyze.AnalyzeReport` — static
+    #: dataflow hazard findings (deadlock / shard-race / ordering /
+    #: invariant families) for the *returned* schedule, whichever
+    #: degradation rung produced it.  Clean compiles report zero
+    #: findings; a rolled-back balance pass, for example, legitimately
+    #: surfaces the reconvergent hazards it left behind.
+    analyze: AnalyzeReport | None = None
     meta: dict = field(default_factory=dict)
 
     @property
@@ -448,6 +460,23 @@ def optimize(graph: Graph, mesh: MeshSpec, *,
         vrep = verify(sched, plan, mesh, coherent=False)
     report.verify = vrep
     report.verify_s = time.perf_counter() - t_verify
+
+    # ---- exit hazard analysis.  Runs on *every* return path — clean,
+    # degraded, fallback_schedule — so no rung of the ladder ships an
+    # unchecked dataflow hazard.  analyze() is total (a crashing rule
+    # becomes an analyze-internal issue), but the belt-and-braces guard
+    # keeps even a broken driver from failing the compile.
+    t_analyze = time.perf_counter()
+    try:
+        report.analyze = analyze(sched, plan, mesh, topology=topo)
+        crashed = report.analyze.crashed_rules()
+        if crashed:
+            degrade("analyze", "analysis rule(s) crashed; hazard report "
+                    "incomplete", ", ".join(crashed))
+    except Exception as e:
+        degrade("analyze", "hazard analysis crashed; no hazard report",
+                _exc(e))
+    report.analyze_s = time.perf_counter() - t_analyze
 
     report.compile_time_s = time.perf_counter() - t0
     report.meta = {"nodes": len(sched.nodes),

@@ -15,8 +15,10 @@ Three tiers, fastest first:
    (``ShardingPlan.to_json`` payload, version-checked by
    ``from_json``), the DSE's canonical assignment snapshot, and the
    recorded QoR.  Loads are gated by
-   :func:`~repro.core.verify.verify_static` in :meth:`PlanCache.fetch`
-   — a plan is only served against the mesh it was derived for.  Any
+   :func:`~repro.core.verify.verify_static` and the plan-only hazard
+   rules of :func:`~repro.core.analyze.analyze_plan` in
+   :meth:`PlanCache.fetch` — a plan is only served against the mesh it
+   was derived for, and never with stale/chained role aliases.  Any
    corruption (truncated file, bad JSON, stale format version, injected
    ``cache.load`` fault) degrades to a miss, never an exception.
 3. **Warm-started re-DSE** — on a miss, :meth:`PlanCache.nearest` finds
@@ -189,7 +191,7 @@ class PlanCache:
         self._lru: OrderedDict[PlanKey, CachedPlan] = OrderedDict()
         self.stats = {"hits_mem": 0, "hits_disk": 0, "misses": 0,
                       "corrupt": 0, "stores": 0, "store_errors": 0,
-                      "rejected": 0}
+                      "rejected": 0, "hazard_rejected": 0}
 
     # -- internals -------------------------------------------------------
     def _path(self, key: PlanKey) -> Path | None:
@@ -232,15 +234,26 @@ class PlanCache:
 
     def fetch(self, key: PlanKey, mesh: MeshSpec
               ) -> tuple[CachedPlan | None, VerifyReport | None]:
-        """:meth:`get` gated by :func:`verify_static` against ``mesh``.
-        A present-but-illegal entry counts as a miss (and is dropped
-        from the LRU so it is not re-tried every request)."""
+        """:meth:`get` gated by :func:`verify_static` against ``mesh``
+        plus the plan-only hazard rules of
+        :func:`repro.core.analyze.analyze_plan` (stale / chained role
+        aliases — the memory tier mutates plans in place via
+        ``apply_rule_change``, so an entry can rot between store and
+        reuse).  A present-but-illegal or hazardous entry counts as a
+        miss (and is dropped from the LRU so it is not re-tried every
+        request)."""
+        from .analyze import analyze_plan   # local: avoid import cycle
         entry = self.get(key)
         if entry is None:
             return None, None
         rep = verify_static(entry.plan, mesh)
         if not rep.ok:
             self.stats["rejected"] += 1
+            self._lru.pop(key, None)
+            return None, rep
+        arep = analyze_plan(entry.plan, mesh)
+        if not arep.ok:
+            self.stats["hazard_rejected"] += 1
             self._lru.pop(key, None)
             return None, rep
         return entry, rep

@@ -37,7 +37,7 @@ import numpy as np
 
 from ..configs import get_config, list_archs
 from ..configs.base import ShapeSpec
-from ..core import (SINGLE_POD, MeshSpec, PlanCache, PlanKey,
+from ..core import (SINGLE_POD, MeshSpec, PlanCache, PlanKey, analyze_plan,
                     build_lm_graph, fetch_or_optimize, shape_bucket)
 from ..models.lm import LM
 from .scheduler import ContinuousBatcher, Request, prefill_bucket, run_static
@@ -134,6 +134,17 @@ def main(argv=None) -> dict:
         print(f"[serve] plan: {plan_info['source']} in "
               f"{plan_info['fetch_ms']:.1f} ms "
               f"(bucket {plan_info['bucket']})")
+    if plan is not None:
+        # Pre-flight hazard lint: a DSE'd plan already carries the full
+        # exit analysis (report.analyze), but cache hits skip the DSE —
+        # re-lint the plan-scoped rules here so no serving path starts
+        # on a hazardous plan unannounced.  Informational, not fatal:
+        # the endpoint owner decides (the --strict lane is
+        # ``python -m repro.lint``).
+        lint = analyze_plan(plan, SINGLE_POD)
+        plan_info["lint"] = {"ok": lint.ok,
+                             "issues": [str(i) for i in lint.issues]}
+        print(f"[serve] lint: {lint.summary()}")
 
     # RNG hygiene: one split at the top — params init and the request
     # trace never share a key, and sampling streams are derived

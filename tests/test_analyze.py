@@ -1,0 +1,427 @@
+"""Static hazard analyzer tests (:mod:`repro.core.analyze`).
+
+A hand-built hazard corpus — under-depth reconvergent diamond, shallow
+soft FIFO, token/dataflow cycles, disagreeing sharded writers, lost
+read-modify-write updates, unordered multi-writers, stale role aliases,
+corrupted session indexes — where each rule trips exactly its hazard
+code, plus a clean sweep asserting zero findings across the whole model
+zoo and the 1k-node synthetic, the ``balance.py`` shared-soft-FIFO
+regression the analyzer surfaced, and the ``analyze.rules`` chaos lane.
+"""
+import sys
+
+import pytest
+
+from repro.core import (AccessMap, Buffer, MemoryEffect, Node, Op,
+                        Schedule, SINGLE_POD, ShardingPlan,
+                        balance_paths, build_lm_graph, optimize)
+from repro.core.ir import TokenEdge
+from repro.core.analyze import (AnalyzeReport, analyze, analyze_plan,
+                                register_rule, registered_rules)
+
+# ``repro.core`` re-exports the ``analyze`` *function*, which shadows the
+# submodule attribute — fetch the module itself for monkeypatching.
+analyze_mod = sys.modules["repro.core.analyze"]
+from repro.core.balance import path_skew
+from repro.core.faults import inject_faults
+from repro.configs import get_config, list_archs
+from repro.configs.base import SHAPES
+
+
+def _mk_node(name, args, loop=None, access=None, unroll=None):
+    op = Op(name=f"{name}_op", kind="compute",
+            ins=[a for a, e in args.items()
+                 if e in (MemoryEffect.READ, MemoryEffect.READ_WRITE)],
+            outs=[a for a, e in args.items()
+                  if e in (MemoryEffect.WRITE, MemoryEffect.READ_WRITE)],
+            loop_dims=loop or {}, access=access or {})
+    n = Node(name=name, args=dict(args), body=[op])
+    if unroll:
+        n.unroll.update(unroll)
+    return n
+
+
+def _deep_diamond():
+    """n0 -> n1 -> n2 -> n3 chain plus an n0 -> n3 shortcut through
+    ``b03`` (skew 2: needs stages >= 3 to avoid stalling)."""
+    s = Schedule("diamond")
+    for b in ("b01", "b12", "b23", "b03", "out"):
+        s.buffers[b] = Buffer(b, (8,), dims=("i",))
+    W, R = MemoryEffect.WRITE, MemoryEffect.READ
+    s.nodes = [
+        _mk_node("n0", {"b01": W, "b03": W}, {"i": 8}),
+        _mk_node("n1", {"b01": R, "b12": W}, {"i": 8}),
+        _mk_node("n2", {"b12": R, "b23": W}, {"i": 8}),
+        _mk_node("n3", {"b23": R, "b03": R, "out": W}, {"i": 8}),
+    ]
+    return s
+
+
+# --------------------------------------------------------------------------
+# Family 1: deadlock / FIFO depth
+# --------------------------------------------------------------------------
+
+def test_underdepth_onchip_diamond_is_reconvergent_deadlock():
+    s = _deep_diamond()
+    rep = analyze(s, rules=["deadlock.depth"])
+    assert rep.codes() == {"reconvergent-deadlock"}
+    (issue,) = rep.errors()
+    assert issue.site == "b03" and "skips 2" in issue.message
+
+
+def test_underdepth_external_fifo_is_fifo_underdepth():
+    s = _deep_diamond()
+    s.buffers["b03"].placement = "external"
+    rep = analyze(s, rules=["deadlock.depth"])
+    assert rep.codes() == {"fifo-underdepth"}
+
+
+def test_sufficient_fifo_without_token_is_warning_only():
+    s = _deep_diamond()
+    s.buffers["b03"].placement = "external"
+    s.buffers["b03"].stages = 3
+    rep = analyze(s, rules=["deadlock.depth"])
+    assert rep.ok  # warnings don't fail the lint
+    assert rep.codes() == {"token-missing"}
+    s.tokens.append(TokenEdge("n0", "n3"))
+    assert analyze(s, rules=["deadlock.depth"]).issues == []
+
+
+def test_balanced_schedule_is_clean():
+    s = _deep_diamond()
+    balance_paths(s, onchip_budget_bytes=0)  # force the soft-FIFO path
+    assert all(k <= 0 for k in path_skew(s).values()) \
+        or s.buffers["b03"].stages >= 3
+    rep = analyze(s)
+    assert rep.ok and not rep.issues
+    assert rep.checks > 0
+
+
+def test_token_cycle_detected():
+    s = _deep_diamond()
+    s.tokens.append(TokenEdge("n3", "n0"))  # closes the chain backwards
+    rep = analyze(s, rules=["deadlock.cycle"])
+    assert rep.codes() == {"token-cycle"}
+
+
+def test_dataflow_cycle_detected_and_depth_rule_stays_silent():
+    s = Schedule("cyc")
+    s.buffers["b1"] = Buffer("b1", (8,), dims=("i",))
+    s.buffers["b2"] = Buffer("b2", (8,), dims=("i",))
+    W, R = MemoryEffect.WRITE, MemoryEffect.READ
+    s.nodes = [_mk_node("na", {"b2": R, "b1": W}, {"i": 8}),
+               _mk_node("nb", {"b1": R, "b2": W}, {"i": 8})]
+    rep = analyze(s)  # all rules: none may crash on a cyclic schedule
+    assert rep.codes() == {"deadlock-cycle"}
+    assert "analyze-internal" not in rep.codes()
+
+
+def test_token_dangling_detected():
+    s = _deep_diamond()
+    s.tokens.append(TokenEdge("ghost", "n0"))
+    rep = analyze(s, rules=["deadlock.cycle"])
+    assert rep.codes() == {"token-dangling"}
+
+
+# --------------------------------------------------------------------------
+# Family 2: shard races
+# --------------------------------------------------------------------------
+
+def test_shard_race_on_disagreeing_writer_dims():
+    s = Schedule("race")
+    s.buffers["buf"] = Buffer("buf", (8,), dims=("i",))
+    s.buffers["t"] = Buffer("t", (8,), dims=("i",))
+    s.buffers["out"] = Buffer("out", (8,), dims=("i",))
+    W, R = MemoryEffect.WRITE, MemoryEffect.READ
+    # w1 and w2 both write buf axis 0, but index it by different loop
+    # dims — instance k of each owns overlapping slices.  The t edge
+    # orders them so order.writers stays quiet and only the race trips.
+    w1 = _mk_node("w1", {"buf": W, "t": W}, {"i": 8},
+                  access={"buf": AccessMap.of(("i", 1))})
+    w2 = _mk_node("w2", {"t": R, "buf": W, "out": W}, {"j": 8},
+                  access={"buf": AccessMap.of(("j", 1))})
+    s.nodes = [w1, w2]
+    rep = analyze(s, rules=["race.shard"])
+    assert rep.codes() == {"shard-race"}
+    (issue,) = rep.errors()
+    assert issue.site == "buf" and "'i'" in issue.message \
+        and "'j'" in issue.message
+    assert analyze(s, rules=["order.writers"]).issues == []
+
+
+def test_agreeing_writers_are_not_a_race():
+    s = Schedule("ok")
+    s.buffers["buf"] = Buffer("buf", (8,), dims=("i",))
+    s.buffers["t"] = Buffer("t", (8,), dims=("i",))
+    W, R = MemoryEffect.WRITE, MemoryEffect.READ
+    s.nodes = [
+        _mk_node("w1", {"buf": W, "t": W}, {"i": 8},
+                 access={"buf": AccessMap.of(("i", 1))}),
+        _mk_node("w2", {"t": R, "buf": W}, {"i": 8},
+                 access={"buf": AccessMap.of(("i", 1))}),
+    ]
+    assert analyze(s, rules=["race.shard"]).issues == []
+
+
+def test_rw_lost_update_on_unindexed_unroll_dim():
+    s = Schedule("rw")
+    s.buffers["acc"] = Buffer("acc", (8,), dims=("i",))
+    n = _mk_node("n", {"acc": MemoryEffect.READ_WRITE},
+                 {"i": 8, "k": 4},
+                 access={"acc": AccessMap.of(("i", 1))},
+                 unroll={"k": 4})
+    s.nodes = [n]
+    rep = analyze(s, rules=["race.shard"])
+    assert rep.codes() == {"rw-lost-update"}
+    # Unrolling over the dim the map *does* index is fine.
+    n.unroll = {"i": 4}
+    assert analyze(s, rules=["race.shard"]).issues == []
+
+
+# --------------------------------------------------------------------------
+# Family 3: write ordering + role aliases
+# --------------------------------------------------------------------------
+
+def test_unordered_writers_flagged_then_cleared_by_token():
+    s = Schedule("wo")
+    s.buffers["buf"] = Buffer("buf", (8,), dims=("i",))
+    W = MemoryEffect.WRITE
+    am = {"buf": AccessMap.of(("i", 1))}  # agree → no shard-race noise
+    s.nodes = [_mk_node("w1", {"buf": W}, {"i": 8}, access=am),
+               _mk_node("w2", {"buf": W}, {"i": 8}, access=am)]
+    rep = analyze(s, rules=["order.writers"])
+    assert rep.codes() == {"write-order"}
+    s.tokens.append(TokenEdge("w1", "w2"))  # now happens-before ordered
+    assert analyze(s, rules=["order.writers"]).issues == []
+
+
+def _plan(**kw):
+    return ShardingPlan(mesh_spec=SINGLE_POD, **kw)
+
+
+def test_alias_rules_clean_chain_missing_drift():
+    spec = (("data",),)
+    clean = _plan(buffer_specs={"src": spec, "alias": spec},
+                  role_sources={"alias": "src"})
+    assert analyze_plan(clean, SINGLE_POD).issues == []
+
+    chained = _plan(buffer_specs={"src": spec, "a": spec, "b": spec},
+                    role_sources={"a": "b", "b": "src"})
+    rep = analyze_plan(chained, SINGLE_POD)
+    assert rep.codes() == {"alias-chain"}
+    assert rep.errors()[0].site == "a"
+
+    missing = _plan(role_sources={"x": "nosuch"})
+    assert analyze_plan(missing, SINGLE_POD).codes() == {"alias-missing"}
+
+    drifted = _plan(buffer_specs={"src": spec, "alias": ((),)},
+                    role_sources={"alias": "src"})
+    assert analyze_plan(drifted, SINGLE_POD).codes() == {"alias-drift"}
+
+
+def test_plan_cache_fetch_rejects_hazardous_entry():
+    from repro.core.plan_cache import CachedPlan, PlanCache, PlanKey
+    cache = PlanCache(None)  # memory tier only
+    key = PlanKey("fp0", tuple(SINGLE_POD.axes), "decode_s64_b4")
+    spec = (("data",),)
+    plan = _plan(buffer_specs={"src": spec, "mid": spec, "alias": spec},
+                 role_sources={"alias": "mid"})
+    cache.put(CachedPlan(key, plan, snapshot={}, qor_total_s=1.0))
+    entry, _ = cache.fetch(key, SINGLE_POD)
+    assert entry is not None  # clean plan flows through
+
+    # The memory tier hands out live objects — rot the alias in place
+    # into a chain, the hazard verify_static does NOT see (all specs
+    # still mirror, so the alias-incoherent check passes) but whose
+    # one-hop apply_rule_change refresh goes stale on the next change.
+    plan.role_sources["mid"] = "src"
+    entry, rep = cache.fetch(key, SINGLE_POD)
+    assert entry is None and rep is not None and rep.ok
+    assert cache.stats["hazard_rejected"] == 1
+    assert key not in cache._lru  # dropped, not re-tried every request
+
+
+# --------------------------------------------------------------------------
+# Family 4: session invariants
+# --------------------------------------------------------------------------
+
+def test_invariant_topology_stale_on_corrupted_index():
+    s = _deep_diamond()
+    topo = s.topology()
+    assert analyze(s, rules=["invariant.index"]).issues == []
+    # Simulate an index-maintenance bug: the producer list rots while
+    # the structure signature still matches.
+    topo.producers["out"].append(s.nodes[0])
+    rep = analyze(s, rules=["invariant.index"])
+    assert rep.codes() == {"topology-stale"}
+
+
+def test_invariant_order_and_depth_memo_stale():
+    s = _deep_diamond()
+    topo = s.topology()
+    topo.topo_order(s.nodes, s.name)
+    topo.depth_of(s.nodes, s.name)
+    topo._order_memo = list(reversed(topo._order_memo))
+    rep = analyze(s, rules=["invariant.index"])
+    assert "order-stale" in rep.codes()
+    topo._order_memo = None
+    topo._depth_memo = dict(topo._depth_memo, n3=99)
+    rep = analyze(s, rules=["invariant.index"])
+    assert rep.codes() == {"depth-stale"}
+
+
+def test_invariant_node_cache_stale_on_inplace_replacement():
+    s = _deep_diamond()
+    s.node("n0")  # build the name->node cache
+    s.nodes[0] = _mk_node("n0", dict(s.nodes[0].args), {"i": 8})
+    rep = analyze(s, rules=["invariant.index"])
+    assert "node-cache-stale" in rep.codes()
+
+
+def test_invariant_deep_check_cap_is_recorded_not_silent(monkeypatch):
+    s = _deep_diamond()
+    s.topology()
+    monkeypatch.setattr(analyze_mod, "DEEP_CHECK_NODE_CAP", 1)
+    rep = analyze(s, rules=["invariant.index"])
+    assert rep.issues == []
+    assert rep.stats["invariant_deep_skipped"] == len(s.nodes)
+
+
+# --------------------------------------------------------------------------
+# Registry + driver contract
+# --------------------------------------------------------------------------
+
+def test_registry_rejects_duplicates_and_unknown_selection():
+    with pytest.raises(ValueError, match="already registered"):
+        register_rule("deadlock.depth", family="deadlock")(lambda ctx: None)
+    with pytest.raises(ValueError, match="unknown analysis rule"):
+        analyze(_deep_diamond(), rules=["no.such.rule"])
+
+
+def test_analyze_plan_runs_only_plan_only_rules():
+    rep = analyze_plan(_plan(), SINGLE_POD)
+    assert rep.rules_run == ["order.alias"]
+    # Schedule-free analyze over *all* rules skips the non-plan_only
+    # ones and records how many, rather than crashing on sched=None.
+    rep = analyze(None, _plan(), SINGLE_POD)
+    assert rep.rules_run == ["order.alias"]
+    assert rep.stats["rules_skipped_no_schedule"] == \
+        len(registered_rules()) - 1
+
+
+def test_crashing_rule_becomes_internal_issue_not_exception():
+    @register_rule("test.crash", family="invariant")
+    def _boom(ctx):
+        raise RuntimeError("kaboom")
+    try:
+        rep = analyze(_deep_diamond(), rules=["test.crash"])
+        assert rep.crashed_rules() == ["test.crash"]
+        assert rep.rules_run == []
+        assert not rep.ok and "kaboom" in rep.errors()[0].message
+    finally:
+        del analyze_mod._RULES["test.crash"]
+
+
+def test_empty_report_is_ok_and_summary_renders():
+    rep = AnalyzeReport()
+    assert rep.ok and "clean" in rep.summary()
+    bad = analyze(_deep_diamond())
+    assert "hazard" in bad.summary()
+
+
+# --------------------------------------------------------------------------
+# balance.py regression: shared soft-FIFO buffer keeps the max depth
+# --------------------------------------------------------------------------
+
+def _shared_fifo_schedule():
+    """One buffer feeding two consumers at different depths.  The deep
+    consumer sorts first in ``balance_paths``'s lexicographic edge walk,
+    so before the fix the later skew-1 edge shrank the FIFO from 3 to 2
+    stages — exactly the under-depth hazard ``deadlock.depth`` flags."""
+    s = Schedule("shared")
+    for b in ("buf", "b1", "b2", "b3", "o1", "o2"):
+        s.buffers[b] = Buffer(b, (8,), dims=("i",))
+    W, R = MemoryEffect.WRITE, MemoryEffect.READ
+    s.nodes = [
+        _mk_node("n0", {"buf": W, "b1": W}, {"i": 8}),
+        _mk_node("m1", {"b1": R, "b2": W}, {"i": 8}),
+        _mk_node("m2", {"b2": R, "b3": W}, {"i": 8}),
+        _mk_node("a_deep", {"buf": R, "b3": R, "o1": W}, {"i": 8}),
+        _mk_node("b_shallow", {"buf": R, "b2": R, "o2": W}, {"i": 8}),
+    ]
+    return s
+
+
+def test_balance_shared_soft_fifo_keeps_max_stage_requirement():
+    s = _shared_fifo_schedule()
+    skews = path_skew(s)
+    assert skews[("n0", "a_deep", "buf")] == 2
+    assert skews[("n0", "b_shallow", "buf")] == 1
+    balance_paths(s, onchip_budget_bytes=0)  # both edges go soft-FIFO
+    # Regression: the skew-1 edge must not shrink stages below the
+    # skew-2 edge's requirement of 3.
+    assert s.buffers["buf"].stages == 3
+    assert s.buffers["buf"].placement == "external"
+    assert {(t.src, t.dst) for t in s.tokens} >= {
+        ("n0", "a_deep"), ("n0", "b_shallow")}
+    rep = analyze(s)
+    assert rep.ok and not rep.issues
+
+
+# --------------------------------------------------------------------------
+# Chaos lane: analyze.rules faults degrade, never raise
+# --------------------------------------------------------------------------
+
+def test_analyze_fault_site_crashes_rules_into_report():
+    s = _deep_diamond()
+    balance_paths(s, onchip_budget_bytes=0)
+    with inject_faults(seed=0, rate=1.0, sites=("analyze.rules",)):
+        rep = analyze(s)
+    assert rep.rules_run == []
+    assert set(rep.crashed_rules()) == set(registered_rules())
+
+
+def test_optimize_survives_analyze_faults_with_degradation():
+    g = build_lm_graph(get_config("smollm-135m", smoke=True),
+                       SHAPES["train_4k"])
+    with inject_faults(seed=3, rate=1.0, sites=("analyze.rules",)):
+        sched, plan, rep = optimize(g, SINGLE_POD)
+    assert rep.verify is not None and rep.verify.ok
+    assert any(d.stage == "analyze" for d in rep.degradations)
+    assert rep.analyze is not None and rep.analyze.crashed_rules()
+
+
+# --------------------------------------------------------------------------
+# Clean sweep: zero findings across the zoo + the 1k-node synthetic
+# --------------------------------------------------------------------------
+
+def _assert_clean_exit(graph):
+    sched, plan, rep = optimize(graph, SINGLE_POD)
+    assert rep.analyze is not None, "optimize() must attach the lint"
+    assert rep.analyze.ok, rep.analyze.summary()
+    assert rep.analyze.issues == [], rep.analyze.summary()
+    assert set(rep.analyze.rules_run) == set(registered_rules())
+    assert rep.analyze.checks > 0
+    assert not any(d.stage == "analyze" for d in rep.degradations)
+    return rep
+
+
+def test_optimize_exit_analysis_clean_and_fast():
+    g = build_lm_graph(get_config("smollm-135m", smoke=True),
+                       SHAPES["train_4k"])
+    rep = _assert_clean_exit(g)
+    assert rep.analyze_s < 0.01  # ISSUE budget: < 10 ms per config
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", list_archs())
+def test_clean_sweep_zoo(arch):
+    g = build_lm_graph(get_config(arch, smoke=True), SHAPES["train_4k"])
+    rep = _assert_clean_exit(g)
+    assert rep.analyze_s < 0.01, f"{arch}: analyze took {rep.analyze_s}s"
+
+
+@pytest.mark.slow
+def test_clean_sweep_synth_1k():
+    from repro.core.generate import get_synth
+    _assert_clean_exit(get_synth("synth_1k"))
